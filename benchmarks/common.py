@@ -1,0 +1,71 @@
+"""Shared benchmark harness: tiny-but-real training runs + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows (the repo-wide
+contract) — ``us_per_call`` is the mean step wall time, ``derived`` carries
+the benchmark's headline quantity (final loss, memory GB, SVD ratio, …).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, QGaLoreConfig, ShapeCell, TrainConfig, \
+    replace
+from repro.core.optimizers import preset
+from repro.models import model_zoo
+from repro.train.trainer import Trainer
+
+# A "130M-family" reduced model that actually trains on CPU in seconds.
+BENCH_MODEL = ModelConfig(
+    name="llama-bench", family="dense", num_layers=4, d_model=128,
+    num_heads=4, num_kv_heads=4, d_ff=344, vocab_size=2048)
+
+BENCH_CELL = ShapeCell("bench", seq_len=64, global_batch=8, kind="train")
+
+
+def bench_qcfg(**kw) -> QGaLoreConfig:
+    base = QGaLoreConfig(rank=16, min_dim=64, update_interval=10,
+                         adaptive_k=2, cos_threshold=0.4)
+    return replace(base, **kw)
+
+
+def bench_tcfg(steps: int, lr: float = 5e-3, seed: int = 0) -> TrainConfig:
+    return TrainConfig(seed=seed, global_batch=BENCH_CELL.global_batch,
+                       seq_len=BENCH_CELL.seq_len, steps=steps,
+                       learning_rate=lr, warmup_steps=5, log_every=0)
+
+
+def run_method(method: str, steps: int, *, qcfg: Optional[QGaLoreConfig] =
+               None, model: Optional[ModelConfig] = None,
+               seed: int = 0, lr: float = 5e-3) -> Dict:
+    """Train BENCH_MODEL with an optimizer preset; returns summary dict."""
+    cfg = model or BENCH_MODEL
+    bundle = model_zoo.build(cfg, dtype=jnp.float32)
+    # method == "raw": take qcfg verbatim (ablations sweep individual knobs)
+    q = (qcfg or bench_qcfg()) if method == "raw" \
+        else preset(method, qcfg or bench_qcfg())
+    tr = Trainer(bundle, bench_tcfg(steps, lr, seed), q, cell=BENCH_CELL,
+                 impl="fused", param_dtype=jnp.float32)
+    t0 = time.monotonic()
+    hist = tr.run()
+    dt = time.monotonic() - t0
+    from repro.core import qgalore as qg
+    mem = qg.memory_report(tr.state.params, q)
+    return {
+        "losses": [h["loss"] for h in hist],
+        "final_loss": float(np.mean([h["loss"] for h in hist[-5:]])),
+        "eval_loss": tr.eval_loss(2),
+        "us_per_call": dt / max(len(hist), 1) * 1e6,
+        "memory_gb": mem["total_gb"],
+        "svd_used": tr.controller.total_svd_count(),
+        "svd_baseline": tr.controller.baseline_svd_count(steps),
+        "trainer": tr,
+    }
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,62 @@
+"""Kernel microbenchmarks (CPU wall time of the jnp reference paths +
+interpret-mode Pallas correctness cost; real-TPU numbers come from the
+roofline, not this box) and serving throughput."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core import quant
+from repro.core.quant import quantize_blockwise
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.monotonic()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.monotonic() - t0) / iters * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (512, 1024), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (1024, 2048))
+    qt = quantize_blockwise(w, bits=8, symmetric=True)
+
+    f_deq = jax.jit(lambda a, q: a @ quant.dequantize(q, jnp.float32))
+    us = _time(f_deq, x, qt)
+    emit("kernels/int8_dense_jnp", us, "M=512;K=1024;N=2048")
+
+    P = jax.random.normal(jax.random.fold_in(key, 2), (1024, 128)) * 0.1
+    qp = quantize_blockwise(P, bits=4, block=128, symmetric=False)
+    f_proj = jax.jit(lambda g, q: g @ quant.dequantize(q, jnp.float32))
+    us = _time(f_proj, x, qp)
+    emit("kernels/int4_project_jnp", us, "M=512;K=1024;R=128")
+
+    f_q = jax.jit(lambda a: quantize_blockwise(a, bits=8, symmetric=True).q)
+    us = _time(f_q, w)
+    emit("kernels/blockwise_quant_jnp", us, "K=1024;N=2048")
+
+    upd = jax.random.normal(jax.random.fold_in(key, 3), w.shape) * 1e-3
+    f_sr = jax.jit(lambda q, u, k: quant.requantize_sr(q, u, k).q)
+    us = _time(f_sr, qt, upd, jax.random.PRNGKey(9))
+    emit("kernels/sr_requant_jnp", us, "K=1024;N=2048")
+
+    # Pallas interpret-mode parity cost (correctness harness, not perf)
+    t0 = time.monotonic()
+    out = ops.int8_matmul(x[:128, :256], quantize_blockwise(
+        w[:256, :512], bits=8, symmetric=True), interpret=True)
+    jax.block_until_ready(out)
+    emit("kernels/int8_pallas_interpret", (time.monotonic() - t0) * 1e6,
+         "M=128;K=256;N=512;mode=interpret")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--steps N`` scales the
+training-based benchmarks (default 60 ≈ CPU-minutes; the claims are
+mechanically checked either way). ``--only <prefix>`` runs a subset.
+
+    PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _roofline(dryrun_dir: str):
+    from repro.analysis import roofline
+    arts = roofline.load_artifacts(f"{dryrun_dir}/16x16")
+    if not arts:
+        print("roofline/none,0,run launch.dryrun first", flush=True)
+        return
+    for key, art in arts.items():
+        if not art.get("ok"):
+            print(f"roofline/{key},0,FAILED", flush=True)
+            continue
+        r = roofline.from_artifact(art)
+        print(f"roofline/{key},0,dominant={r.dominant};"
+              f"compute_s={r.compute_s:.4f};memory_s={r.memory_s:.4f};"
+              f"collective_s={r.collective_s:.4f};"
+              f"mfu_bound={r.mfu_bound:.3f}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--only", default="")
+    ap.add_argument("--dryrun-dir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    from benchmarks import ablations, kernels_bench, table1_pretrain, \
+        table2_memory, table34_finetune
+    sections = [
+        ("table2", lambda: table2_memory.main()),
+        ("kernels", lambda: kernels_bench.main()),
+        ("table1", lambda: table1_pretrain.main(args.steps)),
+        ("fig3", lambda: ablations.fig3_proj_bits(args.steps)),
+        ("fig6", lambda: ablations.fig6_stochastic_rounding(args.steps)),
+        ("fig7", lambda: ablations.fig7_svd_counts(args.steps + 20)),
+        ("fig2", lambda: ablations.fig2_subspace_dynamics(args.steps)),
+        ("table34", lambda: table34_finetune.main(
+            max(args.steps * 2 // 3, 20))),
+        ("roofline", lambda: _roofline(args.dryrun_dir)),
+    ]
+
+    failures = []
+    for name, fn in sections:
+        if args.only and not name.startswith(args.only):
+            continue
+        t0 = time.monotonic()
+        try:
+            fn()
+            print(f"section/{name},{(time.monotonic()-t0)*1e6:.0f},ok",
+                  flush=True)
+        except Exception:                      # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+            print(f"section/{name},0,FAILED", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Paper Table 1 (reduced scale): pre-training loss + weight/optimizer
+memory across Full / Low-Rank / LoRA / GaLore / Q-GaLore.
+
+The paper's claim under test: Q-GaLore ≈ GaLore ≈ Full quality at a fraction
+of the memory; Low-Rank factorization is notably worse."""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import BENCH_CELL, BENCH_MODEL, bench_qcfg, \
+    bench_tcfg, emit, run_method
+from repro.core import qgalore, quant
+from repro.core.adam8bit import AdamHyper
+from repro.core.optimizers import lr_at, preset
+from repro.data.synthetic import batch_for_bundle
+from repro.models import base, lora as lora_lib, model_zoo
+
+
+def _adapter_train(mode: str, steps: int, rank: int = 16, lr: float = 5e-3,
+                   int8_base: bool = False):
+    """LoRA / QLoRA / factorized baseline training loop."""
+    bundle = model_zoo.build(BENCH_MODEL, dtype=jnp.float32)
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    if int8_base:
+        params = quant.tree_quantize(
+            params, bits=8, symmetric=True,
+            predicate=lambda p, l: l.ndim >= 2 and l.shape[-1] >= 64)
+    adapters = lora_lib.init_adapters(params, rank, jax.random.PRNGKey(1),
+                                      mode=mode)
+    qcfg = preset("full")
+    state = qgalore.init(adapters, qcfg)
+    specs = qgalore.leaf_specs(adapters, qcfg)
+    tcfg = bench_tcfg(steps, lr)
+
+    def loss_fn(ad, batch):
+        virt = lora_lib.merge(params, ad, mode=mode, rank=rank)
+        return base.loss_fn(bundle, virt, batch)
+
+    @jax.jit
+    def step(ad, st, batch, lr_, rng):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(ad,
+                                                                     batch)
+        ad, st, _ = qgalore.apply_updates(ad, grads, st, qcfg, lr=lr_,
+                                          rng=rng, specs=specs)
+        return ad, st, loss
+
+    losses = []
+    t0 = time.monotonic()
+    for s in range(steps):
+        batch = batch_for_bundle(bundle, BENCH_CELL, s, 0)
+        adapters, state, loss = step(adapters, state, batch,
+                                     lr_at(s, tcfg),
+                                     jax.random.PRNGKey(s))
+        losses.append(float(loss))
+    dt = time.monotonic() - t0
+    base_bytes = quant.quantized_nbytes(params)
+    mem = (base_bytes + 3 * lora_lib.adapter_nbytes(adapters)) / 2**30
+    return {"final_loss": float(np.mean(losses[-5:])),
+            "us_per_call": dt / steps * 1e6, "memory_gb": mem}
+
+
+def main(steps: int = 60):
+    rows = {}
+    for method in ("full", "galore", "qgalore"):
+        r = run_method(method, steps)
+        rows[method] = r
+        emit(f"table1/{method}", r["us_per_call"],
+             f"loss={r['final_loss']:.3f};mem_gb={r['memory_gb']:.4f}")
+    for name, mode, int8 in (("low_rank", "factorized", False),
+                             ("lora", "lora", False),
+                             ("qlora", "lora", True)):
+        r = _adapter_train(mode, steps, int8_base=int8)
+        rows[name] = r
+        emit(f"table1/{name}", r["us_per_call"],
+             f"loss={r['final_loss']:.3f};mem_gb={r['memory_gb']:.4f}")
+
+    # the paper's ordering claims, checked mechanically:
+    ok_quality = rows["qgalore"]["final_loss"] < \
+        rows["low_rank"]["final_loss"]
+    ok_memory = rows["qgalore"]["memory_gb"] < rows["galore"]["memory_gb"] \
+        < rows["full"]["memory_gb"]
+    emit("table1/claims", 0.0,
+         f"qgalore_beats_lowrank={ok_quality};memory_order_ok={ok_memory}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Fault-tolerance demo: a simulated node failure mid-run, automatic restore
+from the last atomic checkpoint, and bit-exact trajectory continuation.
+
+    PYTHONPATH=src python examples/fault_tolerant_restart.py
+"""
+import logging
+
+import jax.numpy as jnp
+
+from repro.config import QGaLoreConfig, ShapeCell, TrainConfig
+from repro.core.optimizers import preset
+from repro.models import model_zoo
+from repro.train.trainer import Trainer
+
+logging.basicConfig(level=logging.INFO)
+
+CKPT = "/tmp/repro_fault_demo"
+CELL = ShapeCell("demo", 64, 8, "train")
+
+
+def make(fault_hook=None):
+    bundle = model_zoo.build_arch("llama-60m", smoke=True,
+                                  dtype=jnp.float32)
+    qcfg = preset("qgalore", QGaLoreConfig(rank=8, min_dim=32,
+                                           update_interval=10))
+    tcfg = TrainConfig(global_batch=8, seq_len=64, steps=40,
+                       learning_rate=5e-3, warmup_steps=5, log_every=10,
+                       checkpoint_dir=CKPT, checkpoint_every=10,
+                       async_checkpoint=True)
+    return Trainer(bundle, tcfg, qcfg, cell=CELL, param_dtype=jnp.float32,
+                   fault_hook=fault_hook)
+
+
+def main():
+    import shutil
+    shutil.rmtree(CKPT, ignore_errors=True)
+
+    crashed = {"armed": True}
+
+    def failure(step):
+        if step == 25 and crashed["armed"]:
+            crashed["armed"] = False
+            raise RuntimeError("simulated node failure at step 25")
+
+    print("=== run with injected failure at step 25 ===")
+    tr = make(failure)
+    hist = tr.run()
+    print(f"completed {len(hist)} logged steps despite the failure; "
+          f"final loss {hist[-1]['loss']:.4f}")
+
+    print("\n=== reference run without failure ===")
+    shutil.rmtree(CKPT, ignore_errors=True)
+    ref = make().run()
+    print(f"reference final loss {ref[-1]['loss']:.4f}")
+    drift = abs(ref[-1]["loss"] - hist[-1]["loss"])
+    print(f"trajectory drift after recovery: {drift:.5f} "
+          f"({'EXACT' if drift < 1e-3 else 'nonzero — expected if the '
+              'failure landed between checkpoints'})")
+
+
+if __name__ == "__main__":
+    main()

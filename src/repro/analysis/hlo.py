@@ -1,0 +1,94 @@
+"""Post-SPMD HLO parsing: collective ops and their payload bytes.
+
+``compiled.as_text()`` (per-device module after GSPMD partitioning) contains
+lines like::
+
+    %all-reduce.5 = f32[1024,512]{1,0} all-reduce(f32[1024,512]{1,0} %x), ...
+    %all-gather = bf16[8,128]{...} all-gather(bf16[1,128]{...} %p), ...
+
+We sum OPERAND sizes per collective kind (the data each device injects into
+the interconnect), which is the roofline-relevant payload.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# shape token: dtype[dims]{layout}?  e.g. bf16[8,128]{1,0}
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# post-optimization HLO prints operands WITHOUT types, so we read the RESULT
+# type and convert to operand bytes with the replica-group size:
+#   %ag = bf16[8,128]{..} all-gather(%p), ..., replica_groups=[16,16]<=[256]
+_LINE_RE = re.compile(
+    r"=\s*(\(?[a-z0-9]+\[[\d,]*\][^ ]*\)?[^=]*?)\s+(" +
+    "|".join(COLLECTIVES) + r")(-start|-done)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _result_bytes(result_str: str) -> int:
+    return sum(_shape_bytes(m.group(1), m.group(2))
+               for m in _SHAPE_RE.finditer(result_str))
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """{kind: {"count", "bytes"}} with *operand* bytes per device:
+    all-reduce/all-to-all/permute → result size; all-gather → result /
+    group; reduce-scatter → result × group."""
+    out: Dict[str, Dict[str, float]] = {
+        k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        kind, variant = m.group(2), m.group(3)
+        if variant == "-done":
+            continue
+        b = _result_bytes(m.group(1))
+        if variant == "-start" and line.count("(") >= 2 and \
+                m.group(1).startswith("("):
+            b //= 2          # -start results carry (operand, result) tuples
+        g = _group_size(line)
+        if kind == "all-gather":
+            b //= g
+        elif kind == "reduce-scatter":
+            b *= g
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += b
+    out["total"] = {
+        "count": sum(v["count"] for v in out.values()),
+        "bytes": sum(v["bytes"] for v in out.values()),
+    }
+    return out
+
+
+def count_ops(hlo_text: str, names=("fusion", "custom-call", "while",
+                                    "dot", "convolution")) -> Dict[str, int]:
+    return {n: len(re.findall(rf"\b{n}\(", hlo_text)) for n in names}

@@ -1,0 +1,3 @@
+# Q-GaLore core: quantization, projection, adaptive subspace control,
+# 8-bit Adam, and the combined optimizer.
+from repro.core import adam8bit, adaptive, optimizers, projector, qgalore, quant  # noqa: F401

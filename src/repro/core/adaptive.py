@@ -1,0 +1,126 @@
+"""Lazy layer-wise subspace exploration (paper §3.2).
+
+Host-side controller: per (leaf, layer) it tracks the SVD interval and the
+cosine-similarity history of consecutive projection matrices. When the
+similarity stays above ``cos_threshold`` for ``adaptive_k`` consecutive
+refreshes, the interval doubles (``t → 2t``) up to ``max_interval`` — the
+"early bird" layers stop paying for SVDs while drifting layers keep the
+original cadence.
+
+The controller lives outside jit (it manipulates Python ints from per-layer
+similarity scalars returned by the train step) and is checkpointed as JSON.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.config import QGaLoreConfig
+from repro.core.qgalore import LeafSpec
+
+
+@dataclass
+class _Unit:
+    """Controller state for one (leaf, batch-entry) projection matrix."""
+    interval: int
+    next_refresh: int = 0           # step at which the next SVD is due
+    streak: int = 0                 # consecutive refreshes above threshold
+    sims: List[float] = field(default_factory=list)
+    svd_count: int = 0
+
+
+class SubspaceController:
+    """Decides, per training step, which projection matrices to refresh."""
+
+    def __init__(self, specs: List[LeafSpec], cfg: QGaLoreConfig):
+        self.cfg = cfg
+        self.specs = specs
+        self.units: Dict[int, List[_Unit]] = {}
+        for idx, spec in enumerate(specs):
+            if spec.galore:
+                self.units[idx] = [
+                    _Unit(interval=cfg.update_interval)
+                    for _ in range(spec.nbatch)
+                ]
+
+    # -- scheduling ---------------------------------------------------------
+    def masks_for_step(self, step: int) -> Dict[int, np.ndarray]:
+        """{leaf_idx: (nbatch,) bool} — empty dict ⇒ no refresh this step."""
+        masks: Dict[int, np.ndarray] = {}
+        for idx, units in self.units.items():
+            m = np.array([step >= u.next_refresh for u in units], dtype=bool)
+            if m.any():
+                masks[idx] = m
+        return masks
+
+    def is_refresh_step(self, step: int) -> bool:
+        return bool(self.masks_for_step(step))
+
+    # -- feedback -----------------------------------------------------------
+    def observe(self, step: int, masks: Dict[int, np.ndarray],
+                sims: Dict[str, np.ndarray]) -> None:
+        """Consume the per-layer similarities returned by the refresh step."""
+        path_by_idx = {i: s.path for i, s in enumerate(self.specs)}
+        for idx, mask in masks.items():
+            sim_arr = sims.get(path_by_idx[idx])
+            if sim_arr is None:
+                continue
+            sim_arr = np.asarray(sim_arr).reshape(-1)
+            for b, unit in enumerate(self.units[idx]):
+                if not mask[b]:
+                    continue
+                unit.svd_count += 1
+                s = float(sim_arr[b])
+                if s >= 0:
+                    unit.sims.append(s)
+                    if self.cfg.adaptive and s >= self.cfg.cos_threshold:
+                        unit.streak += 1
+                        if unit.streak >= self.cfg.adaptive_k:
+                            unit.interval = min(unit.interval * 2,
+                                                self.cfg.max_interval)
+                            unit.streak = 0
+                    else:
+                        unit.streak = 0
+                unit.next_refresh = step + unit.interval
+
+    # -- accounting ---------------------------------------------------------
+    def total_svd_count(self) -> int:
+        return sum(u.svd_count for us in self.units.values() for u in us)
+
+    def baseline_svd_count(self, steps: int) -> int:
+        """SVDs a fixed-interval GaLore would have used in `steps` steps."""
+        per_unit = 1 + (steps - 1) // self.cfg.update_interval if steps else 0
+        n_units = sum(len(us) for us in self.units.values())
+        return per_unit * n_units
+
+    def interval_summary(self) -> Dict[str, List[int]]:
+        return {self.specs[i].path: [u.interval for u in us]
+                for i, us in self.units.items()}
+
+    # -- checkpointing ------------------------------------------------------
+    def to_json(self) -> str:
+        blob = {
+            str(i): [
+                {"interval": u.interval, "next_refresh": u.next_refresh,
+                 "streak": u.streak, "svd_count": u.svd_count,
+                 "sims": u.sims[-16:]}
+                for u in us]
+            for i, us in self.units.items()
+        }
+        return json.dumps(blob)
+
+    def from_json(self, s: str) -> None:
+        blob = json.loads(s)
+        for i_str, dumps in blob.items():
+            units = self.units.get(int(i_str))
+            if units is None:
+                continue
+            for u, d in zip(units, dumps):
+                u.interval = d["interval"]
+                u.next_refresh = d["next_refresh"]
+                u.streak = d["streak"]
+                u.svd_count = d["svd_count"]
+                u.sims = list(d.get("sims", []))

@@ -1,0 +1,73 @@
+"""Learning-rate schedules and baseline-optimizer presets.
+
+All baselines in the paper (Table 1) are expressed as ``QGaLoreConfig``
+presets over one implementation, which removes a whole class of
+"baseline implemented differently" bugs:
+
+* Full (Adam, BF16)          → galore off, fp32 states, fp weights
+* 8-bit Adam                 → galore off, 8-bit states
+* GaLore (16-bit Adam)       → galore on, fp32 states, fp weights, fp proj
+* 8-bit GaLore               → galore on, 8-bit states, fp weights, fp proj
+* Q-GaLore                   → galore on, 8-bit states, INT8 weights + SR,
+                               INT4 proj, adaptive lazy update
+
+LoRA / Low-Rank factorization baselines are *model* transforms and live in
+``repro.models.lora``.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+from repro.config import QGaLoreConfig, TrainConfig, replace
+
+
+# ---------------------------------------------------------------------------
+# LR schedules
+# ---------------------------------------------------------------------------
+
+def lr_at(step: int, cfg: TrainConfig) -> float:
+    """Host-side schedule (passed into the jitted step as a scalar)."""
+    base = cfg.learning_rate
+    warm = max(cfg.warmup_steps, 1)
+    if step < cfg.warmup_steps:
+        return base * (step + 1) / warm
+    if cfg.lr_schedule == "constant":
+        return base
+    total = max(cfg.steps - cfg.warmup_steps, 1)
+    frac = min((step - cfg.warmup_steps) / total, 1.0)
+    floor = cfg.min_lr_ratio * base
+    if cfg.lr_schedule == "linear":
+        return base + (floor - base) * frac
+    # cosine
+    return floor + 0.5 * (base - floor) * (1 + math.cos(math.pi * frac))
+
+
+# ---------------------------------------------------------------------------
+# Baseline presets (paper Table 1 / Table 2 rows)
+# ---------------------------------------------------------------------------
+
+def preset(name: str, base: QGaLoreConfig = QGaLoreConfig()) -> QGaLoreConfig:
+    name = name.lower()
+    if name in ("full", "adamw", "adam"):
+        return replace(base, enabled=False, adam_bits=32, weight_bits=0,
+                       stochastic_rounding=False)
+    if name == "adam8bit":
+        return replace(base, enabled=False, adam_bits=8, weight_bits=0,
+                       stochastic_rounding=False)
+    if name == "galore":
+        return replace(base, enabled=True, adam_bits=32, weight_bits=0,
+                       proj_bits=32, stochastic_rounding=False,
+                       adaptive=False)
+    if name == "galore8bit":
+        return replace(base, enabled=True, adam_bits=8, weight_bits=0,
+                       proj_bits=32, stochastic_rounding=False,
+                       adaptive=False)
+    if name == "qgalore":
+        return replace(base, enabled=True, adam_bits=8, weight_bits=8,
+                       proj_bits=4, stochastic_rounding=True, adaptive=True)
+    if name == "qgalore_nosr":
+        return replace(base, enabled=True, adam_bits=8, weight_bits=8,
+                       proj_bits=4, stochastic_rounding=False, adaptive=True)
+    raise ValueError(f"unknown optimizer preset: {name}")

@@ -1,0 +1,160 @@
+"""Gradient-subspace computation and projection (GaLore core, paper §3.2-3.3).
+
+For a gradient ``G (m, n)`` GaLore projects into a rank-``r`` subspace:
+
+* ``m >= n`` → "right": ``P = V_r (n, r)``; low-rank ``G @ P`` is ``(m, r)``;
+  back-projection ``L @ P^T``.
+* ``m < n``  → "left":  ``P = U_r (m, r)``; low-rank ``P^T @ G`` is ``(r, n)``;
+  back-projection ``P @ L``.
+
+Two subspace methods:
+
+* ``svd`` — exact ``jnp.linalg.svd`` (paper-faithful).
+* ``randomized`` — Halko-style randomized range finder with ``q`` power
+  iterations: ``O(mnr)`` instead of ``O(mn^2)``; the TPU-native default for
+  large layers (full SVD lowers to slow QR iteration on TPU).
+
+Subspace similarity uses the rotation/sign-invariant overlap
+``||P_old^T P_new||_F^2 / r`` (mean squared canonical correlation), which
+equals 1 for identical subspaces — naive flattened cosine is corrupted by the
+sign/permutation ambiguity of singular vectors.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import QTensor
+
+
+def galore_side(shape: Tuple[int, ...]) -> str:
+    """'right' when m >= n else 'left' (GaLore convention)."""
+    m, n = shape[-2], shape[-1]
+    return "right" if m >= n else "left"
+
+
+def proj_dim(shape: Tuple[int, ...]) -> int:
+    """The dimension the projection matrix lives on (rows of P)."""
+    m, n = shape[-2], shape[-1]
+    return n if m >= n else m
+
+
+def lowrank_shape(shape: Tuple[int, ...], rank: int) -> Tuple[int, ...]:
+    m, n = shape[-2], shape[-1]
+    lead = tuple(shape[:-2])
+    if m >= n:
+        return lead + (m, rank)
+    return lead + (rank, n)
+
+
+# ---------------------------------------------------------------------------
+# Subspace computation
+# ---------------------------------------------------------------------------
+
+def _topr_svd(G: jax.Array, rank: int, side: str) -> jax.Array:
+    """Exact top-r singular vectors. G: (m, n) float32."""
+    U, _, Vh = jnp.linalg.svd(G, full_matrices=False)
+    if side == "right":
+        return Vh[:rank, :].T          # (n, r)
+    return U[:, :rank]                 # (m, r)
+
+
+def _topr_randomized(G: jax.Array, rank: int, side: str, key: jax.Array,
+                     iters: int = 2, oversample: int = 8) -> jax.Array:
+    """Randomized range finder for the top-r left/right singular subspace."""
+    A = G if side == "left" else G.T           # want range(A): (d, k)
+    d, k = A.shape
+    p = min(rank + oversample, k)
+    omega = jax.random.normal(key, (k, p), dtype=A.dtype)
+    Y = A @ omega                               # (d, p)
+    for _ in range(iters):
+        Y = jnp.linalg.qr(Y)[0]
+        Y = A @ (A.T @ Y)
+    Q = jnp.linalg.qr(Y)[0]                     # (d, p) orthonormal
+    # Rayleigh-Ritz refinement to order directions by singular value.
+    B = Q.T @ A                                 # (p, k)
+    Ub, _, _ = jnp.linalg.svd(B, full_matrices=False)
+    return (Q @ Ub)[:, :rank]                   # (d, r)
+
+
+def compute_subspace(
+    G: jax.Array,
+    rank: int,
+    side: Optional[str] = None,
+    method: str = "svd",
+    key: Optional[jax.Array] = None,
+    iters: int = 2,
+) -> jax.Array:
+    """Top-r subspace of a single gradient matrix ``G (m, n)`` → P."""
+    side = side or galore_side(G.shape)
+    Gf = G.astype(jnp.float32)
+    rank = min(rank, min(G.shape[-2], G.shape[-1]))
+    if method == "randomized":
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        return _topr_randomized(Gf, rank, side, key, iters)
+    return _topr_svd(Gf, rank, side)
+
+
+# ---------------------------------------------------------------------------
+# Projection apply / back-project (batched over leading dims)
+# ---------------------------------------------------------------------------
+
+def project(G: jax.Array, P: jax.Array, side: str) -> jax.Array:
+    """Full-rank grad → low-rank. Batched over leading dims of both."""
+    if side == "right":
+        return jnp.einsum("...mn,...nr->...mr", G, P)
+    return jnp.einsum("...mr,...mn->...rn", P, G)
+
+
+def project_back(L: jax.Array, P: jax.Array, side: str) -> jax.Array:
+    """Low-rank update → full-rank."""
+    if side == "right":
+        return jnp.einsum("...mr,...nr->...mn", L, P)
+    return jnp.einsum("...mr,...rn->...mn", P, L)
+
+
+def project_activation(x: jax.Array, P: jax.Array) -> jax.Array:
+    """x (..., m) @ P (m, r) — used by the fused projected-backward path so
+    the DP all-reduce happens on the (r, n) payload, not (m, n)."""
+    return jnp.einsum("...m,mr->...r", x, P)
+
+
+# ---------------------------------------------------------------------------
+# Subspace similarity (adaptive lazy update signal)
+# ---------------------------------------------------------------------------
+
+def subspace_similarity(P_old: jax.Array, P_new: jax.Array) -> jax.Array:
+    """||P_old^T P_new||_F^2 / r ∈ [0, 1]; 1 ⇔ identical subspaces.
+
+    Works on (possibly dequantized) projection matrices with orthonormal-ish
+    columns; batched over leading dims.
+    """
+    M = jnp.einsum("...dr,...ds->...rs",
+                   P_old.astype(jnp.float32), P_new.astype(jnp.float32))
+    r = P_new.shape[-1]
+    return jnp.sum(M * M, axis=(-2, -1)) / r
+
+
+# ---------------------------------------------------------------------------
+# Quantized projection helpers
+# ---------------------------------------------------------------------------
+
+def quantize_projection(P: jax.Array, bits: int, block: int) -> QTensor:
+    """Quantize P (d, r) to INT4 along the r axis (block ≤ r, no padding
+    waste for the common r=128 case)."""
+    eff_block = min(block, max(2, P.shape[-1]))
+    # keep nibble packing happy: even block
+    if eff_block % 2:
+        eff_block += 1
+    return quant.quantize_blockwise(P, bits=bits, block=eff_block,
+                                    symmetric=False)
+
+
+def maybe_dequantize(P, dtype=jnp.float32):
+    if isinstance(P, QTensor):
+        return quant.dequantize(P, dtype)
+    return P.astype(dtype)

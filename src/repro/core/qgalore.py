@@ -1,0 +1,387 @@
+"""The Q-GaLore optimizer (paper §3.5) as a composable JAX module.
+
+Combines:
+  * low-rank gradient projection (GaLore) with per-leaf left/right sides,
+  * INT4 block-wise quantized projection matrices (§3.3),
+  * INT8 block-wise quantized weights updated via stochastic rounding (§3.4),
+  * 8-bit Adam inner optimizer,
+  * in-graph lazy subspace refresh: a per-layer boolean mask (driven by the
+    host-side adaptive controller, §3.2) gates an SVD recomputation via
+    ``lax.cond`` inside a ``lax.scan`` over the stacked-layer axis, so only
+    masked layers pay the SVD cost.
+
+Leaves with stacked leading dims — ``(L, m, n)`` per-layer stacks or
+``(L, E, m, n)`` expert stacks — are treated as batches of independent 2-D
+GaLore problems (vmapped projection, scanned refresh).
+
+Gradients arriving at :func:`apply_updates` may be **full-rank** (simple
+path) or **already low-rank** (fused projected-backward path, see
+``repro.train.stack``); refresh steps always require full-rank grads for the
+leaves being refreshed.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import QGaLoreConfig
+from repro.core import adam8bit, projector, quant
+from repro.core.adam8bit import Adam8bitState, AdamHyper
+from repro.core.quant import QTensor
+
+
+# ---------------------------------------------------------------------------
+# Leaf specs (static metadata)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class LeafSpec:
+    path: str
+    shape: Tuple[int, ...]        # virtual (dequantized) shape
+    galore: bool
+    side: str                     # "left" | "right" | ""
+    rank: int
+    batch: Tuple[int, ...]        # leading dims (layer stacks / experts)
+
+    @property
+    def mat_shape(self) -> Tuple[int, int]:
+        return self.shape[-2], self.shape[-1]
+
+    @property
+    def nbatch(self) -> int:
+        return int(np.prod(self.batch)) if self.batch else 1
+
+    @property
+    def low_shape(self) -> Tuple[int, ...]:
+        return self.batch + projector.lowrank_shape(self.mat_shape, self.rank)
+
+    @property
+    def proj_shape(self) -> Tuple[int, ...]:
+        d = projector.proj_dim(self.mat_shape)
+        return self.batch + (d, self.rank)
+
+
+def _leaf_shape(leaf) -> Tuple[int, ...]:
+    return tuple(leaf.shape)
+
+
+def _is_embedding_path(path: str) -> bool:
+    p = path.lower()
+    return any(k in p for k in ("embed", "lm_head", "unembed", "wte", "wpe"))
+
+
+def leaf_specs(params, cfg: QGaLoreConfig) -> List[LeafSpec]:
+    """One spec per leaf, in tree_flatten order (QTensor = one leaf)."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=quant.is_qtensor)[0]
+    specs = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        shape = _leaf_shape(leaf)
+        galore = (
+            cfg.enabled
+            and len(shape) >= 2
+            and shape[-1] >= cfg.min_dim
+            and shape[-2] >= cfg.min_dim
+            and (cfg.galore_embeddings or not _is_embedding_path(pstr))
+        )
+        if galore:
+            side = projector.galore_side(shape)
+            rank = min(cfg.rank, min(shape[-2], shape[-1]))
+            specs.append(LeafSpec(pstr, shape, True, side, rank,
+                                  tuple(shape[:-2])))
+        else:
+            specs.append(LeafSpec(pstr, shape, False, "", 0, ()))
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state
+# ---------------------------------------------------------------------------
+
+class QGaLoreState(NamedTuple):
+    inner: Any        # pytree of Adam8bitState (aligned with params leaves)
+    proj: Any         # pytree: QTensor P per galore leaf, None otherwise
+    count: jax.Array  # int32 scalar
+
+
+def _hyper(cfg: QGaLoreConfig) -> AdamHyper:
+    return AdamHyper(cfg.beta1, cfg.beta2, cfg.eps, cfg.adam_bits,
+                     cfg.quant_block)
+
+
+def _init_projection(spec: LeafSpec, cfg: QGaLoreConfig, key) -> Any:
+    """Random-orthonormal init; the controller forces a refresh at step 0."""
+    d, r = projector.proj_dim(spec.mat_shape), spec.rank
+    b = spec.nbatch
+    k = jax.random.normal(key, (b, d, r), jnp.float32)
+    q = jnp.linalg.qr(k)[0]
+    q = q.reshape(spec.batch + (d, r)) if spec.batch else q[0]
+    if cfg.proj_bits >= 16:
+        return q.astype(jnp.float32)
+    return projector.quantize_projection(q, cfg.proj_bits, cfg.quant_block)
+
+
+def init(params, cfg: QGaLoreConfig, key=None) -> QGaLoreState:
+    key = jax.random.PRNGKey(0) if key is None else key
+    specs = leaf_specs(params, cfg)
+    flat, treedef = jax.tree_util.tree_flatten(params,
+                                               is_leaf=quant.is_qtensor)
+    hyper = _hyper(cfg)
+    inner, proj = [], []
+    for i, (leaf, spec) in enumerate(zip(flat, specs)):
+        if spec.galore:
+            inner.append(adam8bit.init_state(spec.low_shape, hyper))
+            proj.append(_init_projection(spec, cfg, jax.random.fold_in(key, i)))
+        else:
+            inner.append(adam8bit.init_state(spec.shape, hyper))
+            proj.append(None)
+    return QGaLoreState(
+        inner=jax.tree_util.tree_unflatten(treedef, inner),
+        proj=jax.tree_util.tree_unflatten(treedef, proj),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Subspace refresh (in-graph, mask-gated)
+# ---------------------------------------------------------------------------
+
+def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
+                  cfg: QGaLoreConfig, key):
+    """Recompute P for the masked batch entries of one leaf.
+
+    grad_full: (batch..., m, n); P_old: QTensor/array (batch..., d, r);
+    mask: (nbatch,) bool. Returns (P_new, sims (nbatch,)).
+    sims = -1 where not refreshed.
+    """
+    b = spec.nbatch
+    m, n = spec.mat_shape
+    d, r = projector.proj_dim(spec.mat_shape), spec.rank
+    g = grad_full.reshape(b, m, n).astype(jnp.float32)
+    # flatten leading batch dims of every inner leaf (q / scale / zero)
+    P_flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((b,) + x.shape[len(spec.batch):]), P_old)
+
+    def body(carry, inp):
+        g_b, P_b, mask_b, i = inp
+
+        def do_refresh(_):
+            sub_key = jax.random.fold_in(key, i)
+            P_new = projector.compute_subspace(
+                g_b, spec.rank, spec.side, cfg.subspace_method, sub_key,
+                cfg.subspace_iters)
+            sim = projector.subspace_similarity(
+                projector.maybe_dequantize(P_b), P_new)
+            if cfg.proj_bits >= 16:
+                return P_new.astype(jnp.float32), sim
+            return (projector.quantize_projection(P_new, cfg.proj_bits,
+                                                  cfg.quant_block), sim)
+
+        def keep(_):
+            return P_b, jnp.float32(-1.0)
+
+        P_out, sim = jax.lax.cond(mask_b, do_refresh, keep, operand=None)
+        return carry, (P_out, sim)
+
+    idx = jnp.arange(b, dtype=jnp.int32)
+    _, (P_new_flat, sims) = jax.lax.scan(
+        body, 0, (g, P_flat, mask.astype(bool), idx))
+    # restore original leading batch dims, leaf-wise (works for QTensor and
+    # plain arrays alike — aux metadata is preserved by the scan/cond).
+    P_new = jax.tree_util.tree_map(
+        lambda new, old: new.reshape(old.shape), P_new_flat, P_old)
+    return P_new, sims
+
+
+# ---------------------------------------------------------------------------
+# The update step
+# ---------------------------------------------------------------------------
+
+def _grad_is_lowrank(grad, spec: LeafSpec) -> bool:
+    return spec.galore and tuple(grad.shape) == spec.low_shape \
+        and tuple(grad.shape) != spec.shape
+
+
+def _apply_weight_update(param, direction_or_upd, P_deq, spec: LeafSpec,
+                         cfg: QGaLoreConfig, lr, key):
+    """Back-project (if galore) and apply the update to one (sub-)leaf.
+    Shapes here carry NO leading stack dims — the caller scans over them so
+    the full-rank f32 transients (project_back output, dequantized weight)
+    exist for one layer at a time (this bounded deepseek's optimizer temp
+    at 651 GiB/chip → sub-GiB; see EXPERIMENTS.md §Perf)."""
+    if P_deq is not None:
+        upd = projector.project_back(
+            direction_or_upd.astype(jnp.float32), P_deq, spec.side)
+        upd = cfg.scale * upd
+    else:
+        upd = direction_or_upd.astype(jnp.float32)
+
+    if quant.is_qtensor(param):
+        if cfg.weight_decay:
+            upd = upd + cfg.weight_decay * quant.dequantize(param,
+                                                            jnp.float32)
+        delta = -lr * upd
+        if cfg.stochastic_rounding:
+            return quant.requantize_sr(param, delta, key)
+        w = quant.dequantize(param, jnp.float32) + delta
+        return quant.quantize_blockwise(
+            w, bits=param.bits, block=param.block,
+            symmetric=param.symmetric)
+    w = param.astype(jnp.float32)
+    if cfg.weight_decay:
+        upd = upd + cfg.weight_decay * w
+    return (w - lr * upd).astype(param.dtype)
+
+
+def _update_leaf(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
+                 cfg: QGaLoreConfig, lr, count, mask, key, refresh: bool):
+    """Returns (new_param, new_inner, new_P, sim_array_or_None)."""
+    hyper = _hyper(cfg)
+    sims = None
+    new_P = P
+    if spec.galore:
+        if refresh:
+            if _grad_is_lowrank(grad, spec):
+                raise ValueError(
+                    f"refresh step needs full-rank grad for {spec.path}")
+            new_P, sims = _refresh_leaf(grad, P, mask, spec, cfg, key)
+        P_deq_full = projector.maybe_dequantize(new_P, jnp.float32)
+        if _grad_is_lowrank(grad, spec):
+            low = grad.astype(jnp.float32)
+        else:
+            low = projector.project(grad.astype(jnp.float32), P_deq_full,
+                                    spec.side)
+        direction, new_inner = adam8bit.update(low, inner, count, hyper)
+
+        if spec.batch:
+            # scan the back-projection + SR requant over the stacked layer
+            # axis: per-layer full-rank transients only
+            b = spec.nbatch
+            flat = lambda t: jax.tree_util.tree_map(
+                lambda x: x.reshape((b,) + x.shape[len(spec.batch):]), t)
+            param_f = flat(param)
+            dir_f = direction.reshape((b,) + direction.shape[len(spec.batch):])
+            P_f = flat(new_P)
+
+            def body(carry, inp):
+                p_l, d_l, P_l, i = inp
+                P_deq = projector.maybe_dequantize(P_l, jnp.float32)
+                newp = _apply_weight_update(
+                    p_l, d_l, P_deq, spec, cfg, lr,
+                    jax.random.fold_in(key, i))
+                return carry, newp
+
+            _, new_param_f = jax.lax.scan(
+                body, 0, (param_f, dir_f, P_f, jnp.arange(b)))
+            new_param = jax.tree_util.tree_map(
+                lambda x, ref: x.reshape(ref.shape), new_param_f, param)
+        else:
+            new_param = _apply_weight_update(param, direction, P_deq_full,
+                                             spec, cfg, lr, key)
+    else:
+        direction, new_inner = adam8bit.update(
+            grad.astype(jnp.float32), inner, count, hyper)
+        new_param = _apply_weight_update(param, direction, None, spec, cfg,
+                                         lr, key)
+    return new_param, new_inner, new_P, sims
+
+
+def apply_updates(
+    params,
+    grads,
+    state: QGaLoreState,
+    cfg: QGaLoreConfig,
+    lr,
+    rng,
+    refresh_masks: Optional[Dict[int, jax.Array]] = None,
+    refresh: bool = False,
+    specs: Optional[List[LeafSpec]] = None,
+):
+    """One optimizer step (pure; jit with ``refresh`` static).
+
+    ``grads`` leaves may be full-rank or low-rank (see module docstring).
+    ``refresh_masks``: {leaf_index: (nbatch,) bool} for galore leaves due for
+    subspace refresh (only consulted when ``refresh=True``; unmasked galore
+    leaves keep their P).
+    Returns (new_params, new_state, metrics).
+    """
+    specs = specs or leaf_specs(params, cfg)
+    p_flat, treedef = jax.tree_util.tree_flatten(params,
+                                                 is_leaf=quant.is_qtensor)
+    g_flat = jax.tree_util.tree_flatten(grads, is_leaf=quant.is_qtensor)[0]
+    i_flat = jax.tree_util.tree_flatten(
+        state.inner, is_leaf=lambda x: isinstance(x, Adam8bitState))[0]
+    pr_flat = jax.tree_util.tree_flatten(
+        state.proj, is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
+    count = state.count + 1
+
+    new_p, new_i, new_pr = [], [], []
+    sims_out: Dict[str, jax.Array] = {}
+    refresh_masks = refresh_masks or {}
+    for idx, (param, grad, inner, P, spec) in enumerate(
+            zip(p_flat, g_flat, i_flat, pr_flat, specs)):
+        key = jax.random.fold_in(rng, idx)
+        do_refresh = refresh and spec.galore and idx in refresh_masks
+        mask = refresh_masks.get(idx)
+        if do_refresh and mask is None:
+            mask = jnp.ones((spec.nbatch,), bool)
+        np_, ni_, npr_, sims = _update_leaf(
+            param, grad, inner, P, spec, cfg, lr, count, mask, key,
+            do_refresh)
+        new_p.append(np_)
+        new_i.append(ni_)
+        new_pr.append(npr_)
+        if sims is not None:
+            sims_out[spec.path] = sims
+
+    new_params = jax.tree_util.tree_unflatten(treedef, new_p)
+    new_state = QGaLoreState(
+        inner=jax.tree_util.tree_unflatten(treedef, new_i),
+        proj=jax.tree_util.tree_unflatten(treedef, new_pr),
+        count=count,
+    )
+    metrics = {"sims": sims_out}
+    return new_params, new_state, metrics
+
+
+# ---------------------------------------------------------------------------
+# Memory model (paper Tables 1/2, Fig. 5)
+# ---------------------------------------------------------------------------
+
+def memory_report(params, cfg: QGaLoreConfig,
+                  fp_state_bytes: int = 2) -> Dict[str, float]:
+    """Analytic bytes for weights + optimizer states (the paper's 'estimated
+    memory' columns count exactly these). Non-quantized Adam states are
+    counted at BF16 (paper's baseline convention); pass 4 for true FP32."""
+    specs = leaf_specs(params, cfg)
+    flat = jax.tree_util.tree_flatten(params, is_leaf=quant.is_qtensor)[0]
+    w_bytes = opt_bytes = proj_bytes = 0
+    for leaf, spec in zip(flat, specs):
+        n = int(np.prod(spec.shape))
+        if quant.is_qtensor(leaf):
+            w_bytes += leaf.nbytes()
+        else:
+            w_bytes += n * min(leaf.dtype.itemsize, 2)   # bf16 weights
+        state_elems = int(np.prod(spec.low_shape)) if spec.galore else n
+        bytes_per = 1 if cfg.adam_bits == 8 else fp_state_bytes
+        opt_bytes += 2 * state_elems * bytes_per          # m and v
+        if cfg.adam_bits == 8:
+            opt_bytes += 2 * (state_elems // cfg.quant_block + 1) * 8
+        if spec.galore:
+            d = projector.proj_dim(spec.mat_shape) * spec.rank * spec.nbatch
+            if cfg.proj_bits >= 16:
+                proj_bytes += d * 4
+            else:
+                proj_bytes += d * cfg.proj_bits // 8
+    return {
+        "weights_gb": w_bytes / 2**30,
+        "optimizer_gb": (opt_bytes + proj_bytes) / 2**30,
+        "projection_gb": proj_bytes / 2**30,
+        "total_gb": (w_bytes + opt_bytes + proj_bytes) / 2**30,
+    }

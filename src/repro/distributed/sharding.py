@@ -1,0 +1,243 @@
+"""Logical-axis sharding rules: parameter / activation / optimizer-state
+PartitionSpecs derived from leaf path names, with divisibility-aware fallback
+(a dim is only sharded if the mesh axis divides it — e.g. 8 KV heads on a
+16-way model axis fall back to replication, matching Megatron's handling of
+narrow GQA).
+
+QTensor leaves: ``q`` gets the weight's spec; ``scale``/``zero`` inherit the
+leading-dim specs with the block-group dim sharded only when divisible.
+
+Optimizer state (Q-GaLore): low-rank Adam moments keep the *surviving*
+gradient dim (m for right-projection, n for left), so they inherit that dim's
+sharding from the parent weight; the INT4 projection P (d, r) inherits the
+*projected-away* dim's sharding on d. This keeps the deepseek-671b expert
+moments (~27 GB INT8) sharded 16-way rather than replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import QGaLoreConfig
+from repro.core import quant
+from repro.core.adam8bit import Adam8bitState
+from repro.core.quant import QTensor
+from repro.core import qgalore
+from repro.core.qgalore import LeafSpec
+
+# (regex on normalized path, (row_logical, col_logical)) for the LAST TWO dims
+_MATMUL_RULES = [
+    (r"(wq|wk|wv|wq_b|wkv_b)$", (None, "tp")),
+    (r"wo$", ("tp", None)),
+    (r"(wq_a|wkv_a)$", (None, None)),        # MLA down-proj: small, replicate
+    (r"(wi|wg|w_up|in_proj|w_gates|fuse|mtp_proj)$", (None, "tp")),
+    (r"(wd|w_down|out_proj|site_out)$", ("tp", None)),
+    (r"embedding$", (None, "tp")),
+    (r"head$", (None, "tp")),
+    (r"(router|conv_w|r_gates)$", (None, None)),
+    (r"lora_[qo]/(A|B)$", (None, None)),
+]
+
+
+def norm_path(path) -> str:
+    """jax key-path → '/a/b/c' string."""
+    s = jax.tree_util.keystr(path)
+    return "/" + re.sub(r"\['([^']*)'\]", r"\1/", s).rstrip("/") \
+        .replace("][", "/").replace("[", "").replace("]", "")
+
+
+def logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
+    if ndim == 0:
+        return ()
+    axes: List[Optional[str]] = [None] * ndim
+    if ndim >= 2:
+        for pat, (row, col) in _MATMUL_RULES:
+            if re.search(pat, path):
+                axes[-2], axes[-1] = row, col
+                break
+    if "experts_" in path and ndim >= 3:
+        axes[-3] = "ep"
+    return tuple(axes)
+
+
+def _mesh_axis(logical: Optional[str], mesh: Mesh) -> Optional[str]:
+    if logical in ("tp", "ep"):
+        return "model" if "model" in mesh.axis_names else None
+    return None
+
+
+_EP_FULL_MESH = False
+
+
+def set_ep_full_mesh(value: bool) -> None:
+    """Full-mesh expert sharding requires the manual-EP all-to-all MoE path
+    (moe_apply_ep inside the dp_compress shard_map): with plain GSPMD it
+    degenerates into activation/weight all-gathers (measured — EXPERIMENTS
+    §Perf iteration 3). The launcher enables it only alongside that path."""
+    global _EP_FULL_MESH
+    _EP_FULL_MESH = value
+
+
+def _ep_axes(dim: int, mesh: Mesh):
+    """Expert dim: shard over as much of the mesh as divides it (deepseek's
+    256 experts → one per chip on 16×16; kills both replication and the
+    expert grad all-reduce), else model only."""
+    if _EP_FULL_MESH:
+        avail = tuple(a for a in ("pod", "data", "model")
+                      if a in mesh.axis_names)
+        for cand in (avail, avail[1:], avail[2:]):
+            if not cand:
+                break
+            total = 1
+            for a in cand:
+                total *= mesh.shape[a]
+            if total > 1 and dim % total == 0 and dim >= total:
+                return cand
+    if "model" in mesh.axis_names and dim % mesh.shape["model"] == 0:
+        return ("model",)
+    return None
+
+
+def spec_for(shape, logical, mesh: Mesh) -> P:
+    """Each mesh axis may shard at most one dim: 'ep' (expert) takes
+    precedence over 'tp' when both want the model axis (EP supersedes
+    intra-matrix TP for expert-stacked weights)."""
+    order = sorted(range(len(logical)),
+                   key=lambda i: 0 if logical[i] == "ep" else 1)
+    used = set()
+    parts = [None] * len(logical)
+    for i in order:
+        dim, log = shape[i], logical[i]
+        if log == "ep":
+            axes = _ep_axes(dim, mesh)
+            if axes and not (set(axes) & used):
+                parts[i] = axes if len(axes) > 1 else axes[0]
+                used.update(axes)
+            continue
+        ax = _mesh_axis(log, mesh)
+        if ax is not None and ax not in used and dim > 0 \
+                and dim % mesh.shape[ax] == 0:
+            parts[i] = ax
+            used.add(ax)
+    return P(*parts)
+
+
+def _qtensor_sharding(qt: QTensor, logical, mesh: Mesh) -> QTensor:
+    qspec = spec_for(qt.q.shape, logical, mesh)
+    sspec = spec_for(qt.scale.shape, logical, mesh)
+    return QTensor(
+        NamedSharding(mesh, qspec), NamedSharding(mesh, sspec),
+        None if qt.zero is None else NamedSharding(mesh, sspec),
+        qt.bits, qt.block, qt.orig_last, qt.dtype)
+
+
+def param_sharding(params, mesh: Mesh):
+    """Pytree of NamedShardings matching ``params`` (QTensor-aware)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=quant.is_qtensor)
+    out = []
+    for path, leaf in flat:
+        pstr = norm_path(path)
+        logical = logical_axes(pstr, len(leaf.shape))
+        if quant.is_qtensor(leaf):
+            out.append(_qtensor_sharding(leaf, logical, mesh))
+        else:
+            out.append(NamedSharding(mesh, spec_for(leaf.shape, logical,
+                                                    mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-state sharding
+# ---------------------------------------------------------------------------
+
+def _galore_state_logicals(spec: LeafSpec, logical):
+    """(moment_logical, proj_logical) for a galore leaf."""
+    lead = logical[:-2]
+    row, col = logical[-2], logical[-1]
+    m, n = spec.mat_shape
+    if spec.side == "right":       # low (…, m, r); P (…, n, r)
+        mom = lead + (row, None)
+        proj = lead + (col, None)
+    else:                          # low (…, r, n); P (…, m, r)
+        mom = lead + (None, col)
+        proj = lead + (row, None)
+    return mom, proj
+
+
+def _shard_like(leaf, logical, mesh):
+    if quant.is_qtensor(leaf):
+        return _qtensor_sharding(leaf, logical, mesh)
+    if leaf is None:
+        return None
+    return NamedSharding(mesh, spec_for(leaf.shape, logical, mesh))
+
+
+def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh):
+    """Sharding pytree for a QGaLoreState aligned with ``params``."""
+    specs = qgalore.leaf_specs(params, cfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=quant.is_qtensor)
+    inner_flat = jax.tree_util.tree_flatten(
+        opt_state.inner, is_leaf=lambda x: isinstance(x, Adam8bitState))[0]
+    proj_flat = jax.tree_util.tree_flatten(
+        opt_state.proj,
+        is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
+
+    inner_out, proj_out = [], []
+    for (path, leaf), spec, inner, proj in zip(flat, specs, inner_flat,
+                                               proj_flat):
+        pstr = norm_path(path)
+        logical = logical_axes(pstr, len(spec.shape))
+        if spec.galore:
+            mom_log, proj_log = _galore_state_logicals(spec, logical)
+        else:
+            mom_log, proj_log = logical, None
+        inner_out.append(Adam8bitState(
+            _shard_like(inner.m, mom_log, mesh),
+            _shard_like(inner.v, mom_log, mesh)))
+        proj_out.append(None if proj is None
+                        else _shard_like(proj, proj_log, mesh))
+
+    from repro.core.qgalore import QGaLoreState
+    return QGaLoreState(
+        inner=jax.tree_util.tree_unflatten(treedef, inner_out),
+        proj=jax.tree_util.tree_unflatten(treedef, proj_out),
+        count=NamedSharding(mesh, P()),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch / activation sharding
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_sharding(batch_specs, mesh: Mesh):
+    """Shard every batch input on its leading (batch) dim over pod+data."""
+    dp = batch_axes(mesh)
+    total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(spec):
+        b = spec.shape[0]
+        rest = [None] * (len(spec.shape) - 1)
+        if dp and b % total == 0:
+            return NamedSharding(mesh, P(dp, *rest))
+        # fall back to the largest prefix of dp axes that divides b
+        for sub in (dp[:1],):
+            t = int(np.prod([mesh.shape[a] for a in sub]))
+            if b % t == 0:
+                return NamedSharding(mesh, P(sub, *rest))
+        return NamedSharding(mesh, P(None, *rest))
+
+    return jax.tree_util.tree_map(one, batch_specs)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,50 @@
+"""Pallas TPU kernel: block-wise symmetric INT8 quantization (paper §3.1).
+
+Single pass: read the float tile, per-256-block absmax reduce (VPU),
+round-to-nearest, emit codes + scales. Used when (re)quantizing Adam moments
+and fresh weights.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, q_ref, s_ref, *, block: int):
+    x = x_ref[...].astype(jnp.float32)
+    BR, BC = x.shape
+    nb = BC // block
+    xb = x.reshape(BR, nb, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    s = jnp.maximum(absmax / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(xb / s[..., None]), -128, 127)
+    q_ref[...] = codes.reshape(BR, BC).astype(jnp.int8)
+    s_ref[...] = s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "br", "bc", "interpret"))
+def blockwise_quant(x, *, block: int = 256, br: int = 256, bc: int = 512,
+                    interpret: bool = True):
+    """x (R, C) → (codes int8 (R,C), scales f32 (R, C/block))."""
+    R, C = x.shape
+    assert C % block == 0 and bc % block == 0
+    br, bc = min(br, R), min(bc, C)
+    grid = (R // br, C // bc)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, bc), lambda i, j: (i, j))],
+        out_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc // block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((R, C // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)

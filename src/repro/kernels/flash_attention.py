@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: causal flash attention (framework infra — the 32k
+prefill cells need memory-bounded attention; the pure-JAX chunked form in
+``models.attention`` is the lowering default, this kernel is the TPU
+fast path).
+
+Grid (batch·heads, q_blocks); the kernel loops over KV blocks with the
+online-softmax recurrence, keeping running (max, denom, accum) in VMEM.
+Causality skips KV blocks strictly above the diagonal.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bkv: int, seq: int,
+            causal: bool, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32) * scale        # (bq, d)
+    d = q.shape[-1]
+    dv = v_ref.shape[-1]
+
+    n_kv = seq // bkv
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.dslice(j * bkv, bkv), :].astype(jnp.float32)  # (bkv,d)
+        v = v_ref[pl.dslice(j * bkv, bkv), :].astype(jnp.float32)  # (bkv,dv)
+        s = q @ k.T                                   # (bq, bkv)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bkv), 0)
+            kpos = j * bkv + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bkv), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc0 = jnp.zeros((bq, dv), jnp.float32)
+    if causal:
+        # only blocks up to (and including) the diagonal contribute
+        upper = (qi + 1) * bq
+        n_iter = (upper + bkv - 1) // bkv
+    else:
+        n_iter = n_kv
+    m, l, acc = jax.lax.fori_loop(0, n_iter, body, (m0, l0, acc0))
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = 256,
+                    bkv: int = 256, interpret: bool = True):
+    """q,k,v (B,S,H,d) (H == KV heads here; GQA folds beforehand) →
+    (B,S,H,dv)."""
+    B, S, H, d = q.shape
+    dv = v.shape[-1]
+    bq, bkv = min(bq, S), min(bkv, S)
+    assert S % bq == 0 and S % bkv == 0
+    scale = 1.0 / math.sqrt(d)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, dv)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bq=bq, bkv=bkv, seq=S, causal=causal,
+                          scale=scale),
+        grid=(B * H, S // bq),
+        in_specs=[
+            pl.BlockSpec((None, bq, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((None, S, d), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((None, S, dv), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, bq, dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, dv), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, dv).transpose(0, 2, 1, 3)

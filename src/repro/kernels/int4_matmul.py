@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: gradient × INT4 projection matmul.
+
+The GaLore projection ``G (m,n) @ P (n,r)`` is the per-step hot-spot the
+paper quantizes: P is stored as packed nibbles (two INT4 codes per uint8)
+with asymmetric per-block scale/zero. The kernel unpacks nibbles in VMEM
+(bitwise ops on the VPU), dequantizes, and feeds the MXU — P never exists in
+HBM at more than 4 bits + scales.
+
+r is small (≤ a few hundred), so the grid tiles (M × K) with r resident:
+grid (M/BM, K/BK); the packed P tile is (BK, r/2).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(g_ref, p_ref, s_ref, z_ref, o_ref, acc_ref, *, block: int,
+            n_k: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)              # (BM, BK)
+    packed = p_ref[...]                             # (BK, R//2) uint8
+    lo = (packed & 0xF).astype(jnp.float32) - 8.0
+    hi = ((packed >> 4) & 0xF).astype(jnp.float32) - 8.0
+    BK = packed.shape[0]
+    R = packed.shape[1] * 2
+    u = jnp.stack([lo, hi], axis=-1).reshape(BK, R)  # interleaved nibbles
+    s = s_ref[...]                                  # (BK, R // block)
+    z = z_ref[...]
+    w = ((u.reshape(BK, R // block, block) - z[..., None])
+         * s[..., None]).reshape(BK, R)
+    acc_ref[...] += jax.lax.dot_general(
+        g, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(1) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "bm", "bk", "interpret"))
+def int4_matmul(g, packed, scale, zero, *, block: int = 128, bm: int = 128,
+                bk: int = 512, interpret: bool = True):
+    """g (M,K) @ dequant_int4(packed (K, R/2), scale/zero (K, R/block))
+    → (M,R) in g.dtype (f32 accumulation)."""
+    M, K = g.shape
+    Kp, Rh = packed.shape
+    R = Rh * 2
+    assert K == Kp and R % block == 0
+    bm, bk = min(bm, M), min(bk, K)
+    grid = (M // bm, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, n_k=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, k: (i, k)),
+            pl.BlockSpec((bk, Rh), lambda i, k: (k, 0)),
+            pl.BlockSpec((bk, R // block), lambda i, k: (k, 0)),
+            pl.BlockSpec((bk, R // block), lambda i, k: (k, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, R), lambda i, k: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((M, R), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, R), jnp.float32)],
+        interpret=interpret,
+    )(g, packed, scale, zero)

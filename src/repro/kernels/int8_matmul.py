@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: BF16 activation × INT8 weight matmul with in-VMEM
+block-wise dequantization.
+
+TPU adaptation of the paper's INT8 GEMM (bitsandbytes on CUDA): v5e has no
+INT8 training GEMM, so the win is HBM traffic — weights stream at 1 byte
+instead of 2, dequantize in VMEM, and feed the MXU in BF16. Block layout
+matches the training representation: scales per (row, 256-col group), so the
+kernel consumes optimizer output with zero relayout.
+
+Grid: (M/BM, N/BN, K/BK), K innermost; f32 accumulator lives in a VMEM
+scratch across the K loop. BN is a multiple of the quant block (256) so each
+weight tile owns whole scale groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, block: int, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)            # (BM, BK)
+    q = q_ref[...].astype(jnp.float32)            # (BK, BN)
+    s = s_ref[...]                                # (BK, BN // block)
+    BK, BN = q.shape
+    w = (q.reshape(BK, BN // block, block) * s[..., None]).reshape(BK, BN)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "bm", "bn", "bk", "interpret"))
+def int8_matmul(x, q, scale, *, block: int = 256, bm: int = 128,
+                bn: int = 256, bk: int = 512, interpret: bool = True):
+    """x (M,K) bf16/f32 @ dequant(q (K,N) int8, scale (K, N/block)) → (M,N).
+
+    Shapes must tile evenly (the ops.py wrapper pads); BN % block == 0.
+    """
+    M, K = x.shape
+    Kq, N = q.shape
+    assert K == Kq and N % block == 0 and bn % block == 0
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (M // bm, N // bn, K // bk)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block, n_k=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn // block), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale)

@@ -1,0 +1,97 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles padding to tile boundaries, dtype plumbing, and the
+interpret-vs-compiled switch (CPU containers run ``interpret=True``; on TPU
+set ``REPRO_PALLAS_COMPILED=1`` or pass ``interpret=False``).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import QTensor
+from repro.kernels.blockwise_quant import blockwise_quant as _bq
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.int4_matmul import int4_matmul as _i4mm
+from repro.kernels.int8_matmul import int8_matmul as _i8mm
+from repro.kernels.sr_requant import sr_requant as _srq
+
+
+def _interpret_default() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILED", "0") != "1"
+
+
+def _pad_to(x, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def int8_matmul(x, qt: QTensor, *, interpret=None):
+    """x (..., K) @ dequant(qt (K, N)) — QTensor must be symmetric INT8."""
+    assert qt.bits == 8 and qt.zero is None
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    xf = x.reshape(-1, K)
+    xf, M = _pad_to(xf, 0, 128)
+    out = _i8mm(xf, qt.q, qt.scale, block=qt.block, interpret=interpret)
+    return out[:M, : qt.orig_last].reshape(*lead, qt.orig_last)
+
+
+def int4_project(g, qt: QTensor, *, interpret=None):
+    """GaLore projection g (..., K) @ dequant_int4(qt (K, R))."""
+    assert qt.bits == 4 and qt.zero is not None
+    interpret = _interpret_default() if interpret is None else interpret
+    lead = g.shape[:-1]
+    K = g.shape[-1]
+    gf = g.reshape(-1, K)
+    gf, M = _pad_to(gf, 0, 128)
+    out = _i4mm(gf, qt.q, qt.scale, qt.zero, block=qt.block,
+                interpret=interpret)
+    return out[:M, : qt.orig_last].reshape(*lead, qt.orig_last)
+
+
+def sr_requant_update(qt: QTensor, update, key, *, interpret=None):
+    """Fused SR weight update on a symmetric INT8 QTensor; returns a new
+    QTensor (same layout)."""
+    assert qt.bits == 8 and qt.zero is None
+    interpret = _interpret_default() if interpret is None else interpret
+    R = int(jnp.prod(jnp.asarray(qt.q.shape[:-1]))) if qt.q.ndim > 1 else 1
+    q2 = qt.q.reshape(R, qt.q.shape[-1])
+    s2 = qt.scale.reshape(R, qt.scale.shape[-1])
+    upd = update.reshape(R, -1)
+    pad = q2.shape[-1] - upd.shape[-1]
+    if pad:
+        upd = jnp.pad(upd, ((0, 0), (0, pad)))
+    u01 = jax.random.uniform(key, q2.shape, jnp.float32)
+    q_new, s_new = _srq(q2, s2, upd, u01, block=qt.block,
+                        interpret=interpret)
+    return QTensor(q_new.reshape(qt.q.shape), s_new.reshape(qt.scale.shape),
+                   None, qt.bits, qt.block, qt.orig_last, qt.dtype)
+
+
+def quantize_int8(x, *, block: int = 256, interpret=None) -> QTensor:
+    """Symmetric block-wise INT8 quantization of a 2-D tensor."""
+    interpret = _interpret_default() if interpret is None else interpret
+    orig_last = x.shape[-1]
+    x2 = x.reshape(-1, orig_last)
+    x2, R = _pad_to(x2, 0, 1)
+    x2, _ = _pad_to(x2, 1, block)
+    q, s = _bq(x2, block=block, interpret=interpret)
+    q = q.reshape(*x.shape[:-1], x2.shape[-1])
+    s = s.reshape(*x.shape[:-1], x2.shape[-1] // block)
+    return QTensor(q, s, None, 8, block, orig_last, str(x.dtype))
+
+
+def flash_attention(q, k, v, *, causal: bool = True, interpret=None):
+    """Causal flash attention (B,S,H,d); GQA folded by the caller."""
+    interpret = _interpret_default() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, interpret=interpret)

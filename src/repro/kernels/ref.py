@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def int8_matmul_ref(x, q, scale, block: int):
+    """x (M,K) @ dequant(q (K,N) int8, scale (K, N/block)) → (M,N) f32.
+    Symmetric (zero-point-free) weights, per-(row, block) scales."""
+    K, N = q.shape
+    w = q.astype(jnp.float32).reshape(K, N // block, block) \
+        * scale[..., None]
+    w = w.reshape(K, N)
+    return x.astype(jnp.float32) @ w
+
+
+def int4_matmul_ref(g, packed, scale, zero, block: int):
+    """g (M,K) @ dequant_int4(packed (K, R/2), scale/zero (K, R/block))
+    → (M,R) f32. Asymmetric nibbles (paper's INT4 projection)."""
+    u = quant.unpack_int4(packed).astype(jnp.float32) - 8.0   # qmin = -8
+    K, R = u.shape
+    w = (u.reshape(K, R // block, block) - zero[..., None]) \
+        * scale[..., None]
+    return g.astype(jnp.float32) @ w.reshape(K, R)
+
+
+def sr_requant_ref(q, scale, update, u01, block: int):
+    """Fused Q-GaLore weight update oracle: dequant + add + rescale + SR.
+    q (R,C) int8 symmetric, scale (R, C/block), update (R,C), u01 uniform
+    randoms (R,C). Returns (q', scale')."""
+    R, C = q.shape
+    w = q.astype(jnp.float32).reshape(R, C // block, block) \
+        * scale[..., None]
+    w = w.reshape(R, C) + update.astype(jnp.float32)
+    wb = w.reshape(R, C // block, block)
+    absmax = jnp.max(jnp.abs(wb), axis=-1)
+    new_scale = jnp.maximum(absmax / 127.0, 1e-12)
+    t = wb / new_scale[..., None]
+    codes = jnp.clip(jnp.floor(t + u01.reshape(R, C // block, block)),
+                     -128, 127)
+    return codes.reshape(R, C).astype(jnp.int8), new_scale
+
+
+def blockwise_quant_ref(x, block: int):
+    """x (R,C) → symmetric int8 codes + per-block scales."""
+    R, C = x.shape
+    xb = x.astype(jnp.float32).reshape(R, C // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(xb / scale[..., None]), -128, 127)
+    return codes.reshape(R, C).astype(jnp.int8), scale
+
+
+def flash_attention_ref(q, k, v, causal: bool = True):
+    """q,k,v (B,S,H,d) → (B,S,H,d) f32 softmax attention."""
+    B, S, H, d = q.shape
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused stochastic-rounding weight update (paper §3.4).
+
+One HBM pass instead of four: read INT8 weight tile + scales + BF16/F32
+update tile, dequantize in VMEM, add, recompute the per-block absmax scale,
+stochastically round, write INT8 codes + new scales. The eager-PyTorch
+version streams W twice (dequant, requant) plus the update and the randoms;
+this kernel streams each exactly once — the op is purely memory-bound so the
+fusion IS the speedup (~4× traffic reduction at 1 byte/weight).
+
+The uniform randoms are supplied as an input (generated with jax.random
+outside; on real TPU pltpu.prng_random_bits would generate in-kernel and
+remove that stream too — kept as an input for interpret-mode parity).
+
+Block layout: rows × 256-column groups, matching the training QTensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, s_ref, upd_ref, u_ref, qo_ref, so_ref, *, block: int):
+    q = q_ref[...].astype(jnp.float32)               # (BR, BC)
+    s = s_ref[...]                                   # (BR, BC // block)
+    BR, BC = q.shape
+    nb = BC // block
+    w = (q.reshape(BR, nb, block) * s[..., None])
+    w = w + upd_ref[...].astype(jnp.float32).reshape(BR, nb, block)
+    absmax = jnp.max(jnp.abs(w), axis=-1)            # (BR, nb)
+    new_s = jnp.maximum(absmax / 127.0, 1e-12)
+    t = w / new_s[..., None]
+    codes = jnp.floor(t + u_ref[...].reshape(BR, nb, block))
+    codes = jnp.clip(codes, -128, 127)
+    qo_ref[...] = codes.reshape(BR, BC).astype(jnp.int8)
+    so_ref[...] = new_s
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "br", "bc", "interpret"))
+def sr_requant(q, scale, update, u01, *, block: int = 256, br: int = 256,
+               bc: int = 512, interpret: bool = True):
+    """Fused W' = SR_quant(deq(W) + update).
+
+    q (R,C) int8; scale (R, C/block) f32; update/u01 (R,C).
+    Returns (q' int8, scale' f32)."""
+    R, C = q.shape
+    assert C % block == 0 and bc % block == 0
+    br, bc = min(br, R), min(bc, C)
+    grid = (R // br, C // bc)
+    return pl.pallas_call(
+        functools.partial(_kernel, block=block),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc // block), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc // block), lambda i, j: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((R, C), jnp.int8),
+            jax.ShapeDtypeStruct((R, C // block), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, scale, update, u01)

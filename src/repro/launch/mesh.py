@@ -1,0 +1,17 @@
+"""Production meshes. Functions, not module constants — importing this module
+never touches jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape, axes):
+    """Arbitrary mesh for tests/small runs (e.g. (2, 2) on 4 host devices)."""
+    return jax.make_mesh(tuple(shape), tuple(axes))

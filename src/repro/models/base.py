@@ -1,0 +1,127 @@
+"""The model contract consumed by training, serving, and the dry-run.
+
+Every architecture is expressed as::
+
+    embed → [segment_0 | segment_1 | ...] → head
+
+where each segment is a homogeneous stack of blocks scanned over a leading
+layer axis (params leaves are stacked ``(L, ...)``). This single contract
+powers three executions:
+
+* the **simple path** (``loss_fn``): plain ``lax.scan`` + ``jax.grad``;
+* the **fused projected-backward path** (``repro.train.stack``): a manual
+  forward/backward scan pair that projects each layer's weight gradient into
+  the GaLore subspace *inside* the backward scan — the JAX-native analogue of
+  the paper's fused backward (full-rank grads never co-reside);
+* **serving** (``repro.serve``): per-segment prefill/decode with stacked
+  caches.
+
+``carry`` is a dict with at least ``h`` (hidden states) and ``aux``
+(accumulated auxiliary losses, e.g. MoE load-balance); architectures may add
+extras (``x0`` for Zamba's shared-block input, ``memory`` for enc-dec).
+``ctx`` is a read-only pytree shared by all layers of all segments (positions,
+shared-block params, …) built by ``embed``.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+
+
+def scan_layers(body, init, xs, *, reverse: bool = False, length=None):
+    """lax.scan over a LAYER axis, honoring REPRO_SCAN_UNROLL.
+
+    XLA's cost_analysis counts a while-loop body once, so the dry-run cost
+    pass sets REPRO_SCAN_UNROLL=full to unroll layer scans (exact FLOP /
+    collective accounting). Time-step scans (sLSTM, decode loops) must NOT
+    use this helper.
+    """
+    unroll = os.environ.get("REPRO_SCAN_UNROLL", "1")
+    if unroll == "full":
+        n = length
+        if n is None:
+            n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        u: Any = max(int(n), 1)
+    else:
+        u = int(unroll)
+    return jax.lax.scan(body, init, xs, reverse=reverse, unroll=u,
+                        length=length)
+
+
+@dataclass(frozen=True)
+class SegmentDef:
+    name: str
+    n_layers: int
+    # (layer_params, carry, ctx) -> carry
+    apply: Callable
+    # (layer_params, carry, cache_slice, ctx) -> (carry, cache_slice)
+    decode: Optional[Callable] = None
+    # (layer_params, carry, ctx) -> (carry, cache_slice)   [prefill]
+    prefill: Optional[Callable] = None
+    # (batch, max_len, dtype) -> per-layer cache spec pytree
+    cache_spec: Optional[Callable] = None
+    # optional carry transformation applied before this segment's scan
+    pre: Optional[Callable] = None          # (params, carry, ctx) -> carry
+
+
+@dataclass(frozen=True)
+class ModelBundle:
+    cfg: ModelConfig
+    init_params: Callable                    # key -> params dict
+    embed: Callable                          # (params, batch) -> (carry, ctx)
+    segments: Tuple[SegmentDef, ...]
+    head_loss: Callable                      # (params, carry, batch) -> (loss, metrics)
+    head_logits: Callable                    # (params, carry) -> logits (last pos)
+    input_specs: Callable                    # (cell) -> batch pytree of SDS
+    # decode-time embedding: (params, tokens (B,1), extras) -> (carry, ctx).
+    # None ⇒ derive from `embed` with a token-only batch (decoder-only LMs).
+    embed_decode: Optional[Callable] = None
+    # names of carry entries that must persist across decode steps (e.g.
+    # the encoder "memory") — captured at prefill, fed back at decode.
+    decode_extras: Tuple[str, ...] = ()
+
+    def seg_key(self, i: int) -> str:
+        return f"seg{i}_{self.segments[i].name}"
+
+
+def run_segments(bundle: ModelBundle, params, carry, ctx, *,
+                 remat: str = "none"):
+    """The simple full-sequence forward over all segments."""
+    for i, seg in enumerate(bundle.segments):
+        if seg.pre is not None:
+            carry = seg.pre(params, carry, ctx)
+        body = lambda c, lp, _seg=seg: (_seg.apply(lp, c, ctx), None)
+        if remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        elif remat == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots,
+                prevent_cse=False)
+        carry, _ = scan_layers(body, carry, params[bundle.seg_key(i)])
+    return carry
+
+
+def loss_fn(bundle: ModelBundle, params, batch, *, remat: str = "none"):
+    """Simple-path training loss (used by baselines, tests, and as the
+    oracle for the fused path)."""
+    carry, ctx = bundle.embed(params, batch)
+    carry = run_segments(bundle, params, carry, ctx, remat=remat)
+    return bundle.head_loss(params, carry, batch)
+
+
+def count_params(bundle: ModelBundle) -> int:
+    """Parameter count without allocation (eval_shape)."""
+    shapes = jax.eval_shape(bundle.init_params, jax.random.PRNGKey(0))
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(shapes):
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        total += n
+    return total

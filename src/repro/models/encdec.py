@@ -1,0 +1,206 @@
+"""Encoder-decoder model (seamless-m4t-medium backbone).
+
+The audio frontend is a STUB per the assignment: ``input_specs`` feeds
+precomputed frame embeddings (B, S_enc, d) directly to the encoder. Decoder
+length is ``seq_len // 4`` in train/prefill cells (ASR-like output ratio,
+documented in DESIGN.md); decode cells use a self-attention cache of
+``seq_len`` and an encoder memory of ``seq_len // 4``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeCell
+from repro.models import attention, layers
+from repro.models.base import ModelBundle, SegmentDef
+from repro.models.layers import cross_entropy, dense, dense_init, \
+    embed_init, ffn_apply, ffn_init, rmsnorm, rmsnorm_init
+
+DEC_RATIO = 4      # decoder length = seq_len // DEC_RATIO for train/prefill
+
+
+def enc_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": rmsnorm_init(cfg.d_model),
+        "attn": attention.gqa_init(k1, cfg, dtype),
+        "ffn_norm": rmsnorm_init(cfg.d_model),
+        "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, dtype=dtype),
+    }
+
+
+def dec_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "self_norm": rmsnorm_init(cfg.d_model),
+        "self_attn": attention.gqa_init(k1, cfg, dtype),
+        "cross_norm": rmsnorm_init(cfg.d_model),
+        "cross_attn": attention.gqa_init(k2, cfg, dtype),
+        "ffn_norm": rmsnorm_init(cfg.d_model),
+        "ffn": ffn_init(k3, cfg.d_model, cfg.d_ff, dtype=dtype),
+    }
+
+
+def enc_block_apply(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
+    h = carry["h"]
+    a = attention.gqa_apply(lp["attn"],
+                            rmsnorm(h, lp["attn_norm"], cfg.rmsnorm_eps),
+                            cfg, positions=ctx["enc_positions"],
+                            causal=False, q_chunk=q_chunk, dtype=dtype)
+    h = h + a
+    f = ffn_apply(lp["ffn"], rmsnorm(h, lp["ffn_norm"], cfg.rmsnorm_eps),
+                  cfg.ffn_activation, dtype)
+    return {**carry, "h": h + f}
+
+
+def dec_block_apply(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
+    h = carry["h"]
+    a = attention.gqa_apply(lp["self_attn"],
+                            rmsnorm(h, lp["self_norm"], cfg.rmsnorm_eps),
+                            cfg, positions=ctx["dec_positions"],
+                            causal=True, q_chunk=q_chunk, dtype=dtype)
+    h = h + a
+    c = attention.cross_apply(lp["cross_attn"],
+                              rmsnorm(h, lp["cross_norm"], cfg.rmsnorm_eps),
+                              carry["memory"], cfg, dtype=dtype)
+    h = h + c
+    f = ffn_apply(lp["ffn"], rmsnorm(h, lp["ffn_norm"], cfg.rmsnorm_eps),
+                  cfg.ffn_activation, dtype)
+    return {**carry, "h": h + f}
+
+
+def dec_block_prefill(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
+    h = carry["h"]
+    x = rmsnorm(h, lp["self_norm"], cfg.rmsnorm_eps)
+    a, kv = attention.gqa_prefill(lp["self_attn"], x, cfg,
+                                  positions=ctx["dec_positions"],
+                                  q_chunk=q_chunk, dtype=dtype)
+    h = h + a
+    c = attention.cross_apply(lp["cross_attn"],
+                              rmsnorm(h, lp["cross_norm"], cfg.rmsnorm_eps),
+                              carry["memory"], cfg, dtype=dtype)
+    h = h + c
+    f = ffn_apply(lp["ffn"], rmsnorm(h, lp["ffn_norm"], cfg.rmsnorm_eps),
+                  cfg.ffn_activation, dtype)
+    k, v = kv
+    pad = ctx["max_len"] - k.shape[1]
+    kv = (jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+          jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))))
+    return {**carry, "h": h + f}, kv
+
+
+def dec_block_decode(lp, carry, cache, ctx, cfg: ModelConfig, *, dtype):
+    h = carry["h"]
+    x = rmsnorm(h, lp["self_norm"], cfg.rmsnorm_eps)
+    a, cache = attention.gqa_decode(lp["self_attn"], x, cfg, cache=cache,
+                                    length=ctx["length"], dtype=dtype)
+    h = h + a
+    c = attention.cross_apply(lp["cross_attn"],
+                              rmsnorm(h, lp["cross_norm"], cfg.rmsnorm_eps),
+                              carry["memory"], cfg, dtype=dtype)
+    h = h + c
+    f = ffn_apply(lp["ffn"], rmsnorm(h, lp["ffn_norm"], cfg.rmsnorm_eps),
+                  cfg.ffn_activation, dtype)
+    return {**carry, "h": h + f}, cache
+
+
+def build(cfg: ModelConfig, *, q_chunk: int = 1024,
+          dtype=jnp.bfloat16) -> ModelBundle:
+    n_enc = cfg.num_encoder_layers or cfg.num_layers
+    n_dec = cfg.num_layers
+
+    def init_params(key):
+        ks = jax.random.split(key, 6)
+        return {
+            "embedding": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "frame_norm": rmsnorm_init(cfg.d_model),
+            "seg0_encoder": layers.stacked_init(
+                functools.partial(enc_block_init, cfg=cfg), ks[1], n_enc),
+            "enc_final_norm": rmsnorm_init(cfg.d_model),
+            "seg1_decoder": layers.stacked_init(
+                functools.partial(dec_block_init, cfg=cfg), ks[2], n_dec),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "head": dense_init(ks[3], cfg.d_model, cfg.vocab_size,
+                               scale=1.0 / math.sqrt(cfg.d_model)),
+        }
+
+    def embed(params, batch):
+        frames = batch["frames"].astype(dtype)       # stubbed audio frontend
+        h = rmsnorm(frames, params["frame_norm"], cfg.rmsnorm_eps)
+        emb = layers.materialize(params["embedding"], dtype)
+        dec_h = jnp.take(emb, batch["tokens"], axis=0)
+        B, Se = h.shape[:2]
+        Sd = dec_h.shape[1]
+        carry = {"h": h, "dec_h": dec_h,
+                 "memory": jnp.zeros((B, 1, cfg.d_model), dtype),
+                 "aux": jnp.zeros((), jnp.float32)}
+        ctx = {
+            "enc_positions": jnp.broadcast_to(
+                jnp.arange(Se, dtype=jnp.int32)[None], (B, Se)),
+            "dec_positions": jnp.broadcast_to(
+                jnp.arange(Sd, dtype=jnp.int32)[None], (B, Sd)),
+        }
+        return carry, ctx
+
+    def bridge(params, carry, ctx):
+        """After the encoder: promote h → memory, start the decoder."""
+        mem = rmsnorm(carry["h"], params["enc_final_norm"], cfg.rmsnorm_eps)
+        return {**carry, "memory": mem, "h": carry["dec_h"]}
+
+    segments = (
+        SegmentDef(name="encoder", n_layers=n_enc,
+                   apply=functools.partial(enc_block_apply, cfg=cfg,
+                                           dtype=dtype, q_chunk=q_chunk)),
+        SegmentDef(name="decoder", n_layers=n_dec,
+                   apply=functools.partial(dec_block_apply, cfg=cfg,
+                                           dtype=dtype, q_chunk=q_chunk),
+                   prefill=functools.partial(dec_block_prefill, cfg=cfg,
+                                             dtype=dtype, q_chunk=q_chunk),
+                   decode=functools.partial(dec_block_decode, cfg=cfg,
+                                            dtype=dtype),
+                   cache_spec=functools.partial(
+                       attention.gqa_cache_spec, cfg),
+                   pre=bridge),
+    )
+
+    def head_loss(params, carry, batch):
+        h = rmsnorm(carry["h"], params["final_norm"], cfg.rmsnorm_eps)
+        logits = dense(h, params["head"], dtype)
+        loss, metrics = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return loss, {**metrics, "ce_loss": loss}
+
+    def head_logits(params, carry):
+        h = rmsnorm(carry["h"][:, -1:], params["final_norm"],
+                    cfg.rmsnorm_eps)
+        return dense(h, params["head"], dtype)
+
+    def input_specs(cell: ShapeCell):
+        B, S = cell.global_batch, cell.seq_len
+        Sd = max(S // DEC_RATIO, 16)
+        if cell.kind == "decode":
+            # decode cells: self-cache of S; memory from S // DEC_RATIO frames
+            Sd = max(S // DEC_RATIO, 16)
+        return {
+            "frames": jax.ShapeDtypeStruct(
+                (B, Sd if cell.kind == "decode" else S, cfg.d_model),
+                jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((B, Sd), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, Sd), jnp.int32),
+        }
+
+    def embed_decode(params, tokens, extras):
+        emb = layers.materialize(params["embedding"], dtype)
+        h = jnp.take(emb, tokens, axis=0)
+        carry = {"h": h, "memory": extras["memory"],
+                 "aux": jnp.zeros((), jnp.float32)}
+        return carry, {}
+
+    return ModelBundle(cfg=cfg, init_params=init_params, embed=embed,
+                       segments=segments, head_loss=head_loss,
+                       head_logits=head_logits, input_specs=input_specs,
+                       embed_decode=embed_decode, decode_extras=("memory",))

@@ -1,0 +1,155 @@
+"""Shared neural-net building blocks (pure JAX, quantization-aware).
+
+Every matmul goes through :func:`dense`, which transparently handles
+``QTensor`` (INT8) weights — dequantizing on the fly (the Pallas
+``int8_matmul`` kernel replaces this on TPU; see ``repro.kernels``).
+
+Parameter trees are plain nested dicts; leaf names follow the conventions
+consumed by ``repro.distributed.sharding`` (wq/wk/wv/wo, wi/wg/wd, experts_*,
+embedding, head, *_norm).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.core.quant import QTensor
+
+
+# ---------------------------------------------------------------------------
+# Init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, scale: Optional[float] = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init."""
+    std = scale if scale is not None else 1.0 / math.sqrt(in_dim)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, out_dim),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def stacked_init(init_fn, key, num: int, *args, **kwargs):
+    """vmap an init over a leading layer axis."""
+    keys = jax.random.split(key, num)
+    return jax.vmap(lambda k: init_fn(k, *args, **kwargs))(keys)
+
+
+# ---------------------------------------------------------------------------
+# Quantization-aware matmul
+# ---------------------------------------------------------------------------
+
+def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
+    if isinstance(w, QTensor):
+        return quant.dequantize(w, dtype)
+    return w.astype(dtype)
+
+
+def dense(x: jax.Array, w, dtype=jnp.bfloat16) -> jax.Array:
+    """x @ w with on-the-fly dequantization of INT8 weights."""
+    wm = materialize(w, dtype)
+    return jnp.einsum("...d,df->...f", x.astype(dtype), wm)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rotary
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rmsnorm_init(dim: int) -> jax.Array:
+    # stored as offset from 1 (gemma-style "zero-centered" scale)
+    return jnp.zeros((dim,), jnp.float32)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+def activation_fn(name: str):
+    return {"silu": swiglu, "gelu": geglu}[name]
+
+
+def rope_angles(positions: jax.Array, head_dim: int,
+                theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions (..., S) → (sin, cos) each (..., S, head_dim//2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); sin/cos (..., S, hd//2) — rotate-half convention."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    half = x.shape[-1] // 2
+    x1, x2 = xf[..., :half], xf[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]   # broadcast over heads
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# FFN (dense / gated)
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d_model: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "wg": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "wd": dense_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def ffn_apply(p: dict, x: jax.Array, activation: str = "silu",
+              dtype=jnp.bfloat16) -> jax.Array:
+    act = activation_fn(activation)
+    h = act(dense(x, p["wg"], dtype), dense(x, p["wi"], dtype))
+    return dense(h, p["wd"], dtype)
+
+
+# ---------------------------------------------------------------------------
+# Misc
+# ---------------------------------------------------------------------------
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return logits
+    return jnp.tanh(logits / cap) * cap
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: Optional[jax.Array] = None) -> Tuple[jax.Array, dict]:
+    """Token-mean CE in float32; labels == -1 are ignored."""
+    lf = logits.astype(jnp.float32)
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    safe = jnp.where(valid, labels, 0)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    denom = jnp.maximum(valid.sum(), 1)
+    loss = nll.sum() / denom
+    acc = ((jnp.argmax(lf, -1) == safe) & valid).sum() / denom
+    return loss, {"accuracy": acc, "tokens": denom}

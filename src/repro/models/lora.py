@@ -1,0 +1,85 @@
+"""LoRA / QLoRA / plain low-rank-factorization baselines (paper Tables 1/3/4).
+
+These are *model-side* transforms (adapters), unlike GaLore's optimizer-side
+projection:
+
+* ``lora``      — W = W₀ (frozen) + (α/r)·A B ; optimize A, B.
+* ``qlora``     — same, with W₀ kept in INT8 (frozen quantized base).
+* ``factorized``— W = U V from scratch (the paper's "Low-Rank" row).
+
+Training merges adapters into a virtual weight tree and reuses the standard
+bundle loss — correctness by construction, at the memory cost the paper
+ascribes to these baselines (which is the point of the comparison).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models.base import ModelBundle
+
+
+def _eligible(path: str, leaf) -> bool:
+    if getattr(leaf, "ndim", 0) != 2 and not (
+            quant.is_qtensor(leaf) and len(leaf.shape) == 2):
+        return False
+    p = path.lower()
+    return not any(k in p for k in ("embed", "head", "norm"))
+
+
+def init_adapters(params, rank: int, key, mode: str = "lora"):
+    """{path: {"A","B"} or {"U","V"}} for every eligible 2-D leaf."""
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=quant.is_qtensor)[0]
+    out = {}
+    for i, (path, leaf) in enumerate(flat):
+        pstr = jax.tree_util.keystr(path)
+        if not _eligible(pstr, leaf):
+            continue
+        m, n = leaf.shape
+        k = jax.random.fold_in(key, i)
+        r = min(rank, m, n)
+        if mode == "factorized":
+            out[pstr] = {
+                "U": jax.random.normal(k, (m, r)) / math.sqrt(m),
+                "V": jax.random.normal(jax.random.fold_in(k, 1), (r, n))
+                / math.sqrt(r),
+            }
+        else:
+            out[pstr] = {
+                "A": jax.random.normal(k, (m, r)) / math.sqrt(m),
+                "B": jnp.zeros((r, n)),
+            }
+    return out
+
+
+def merge(params, adapters: Dict, alpha: float = 32.0, rank: int = 16,
+          mode: str = "lora"):
+    """Virtual weight tree: base (+ scaled adapter product)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=quant.is_qtensor)
+    leaves = []
+    for path, leaf in flat:
+        pstr = jax.tree_util.keystr(path)
+        ad = adapters.get(pstr)
+        if ad is None:
+            leaves.append(quant.dequantize(leaf)
+                          if quant.is_qtensor(leaf) else leaf)
+            continue
+        if mode == "factorized":
+            leaves.append((ad["U"] @ ad["V"]).astype(jnp.float32))
+        else:
+            base = quant.dequantize(leaf, jnp.float32) \
+                if quant.is_qtensor(leaf) else leaf.astype(jnp.float32)
+            r = ad["A"].shape[1]
+            leaves.append(base + (alpha / r) * (ad["A"] @ ad["B"]))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def adapter_nbytes(adapters) -> int:
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(adapters))

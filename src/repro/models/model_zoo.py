@@ -1,0 +1,73 @@
+"""Architecture registry: build any assigned config into a ModelBundle."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.base import ModelBundle, count_params
+
+ARCH_IDS = (
+    "internvl2-2b", "xlstm-125m", "deepseek-v3-671b", "qwen3-moe-30b-a3b",
+    "mistral-nemo-12b", "qwen3-32b", "gemma-7b", "yi-9b",
+    "seamless-m4t-medium", "zamba2-2.7b",
+    # paper's own pre-training family
+    "llama-60m", "llama-130m", "llama-350m", "llama-1b", "llama-7b",
+)
+
+
+def _module_for(arch_id: str) -> str:
+    return "repro.configs." + arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
+    mod = importlib.import_module(_module_for(arch_id))
+    return mod.smoke_config() if smoke else mod.CONFIG
+
+
+def build(cfg: ModelConfig, *, q_chunk: int = 1024,
+          dtype=jnp.bfloat16, ep_axis=None) -> ModelBundle:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer
+        return transformer.build(cfg, q_chunk=q_chunk, dtype=dtype,
+                                 ep_axis=ep_axis)
+    if fam == "xlstm":
+        from repro.models import xlstm_model
+        return xlstm_model.build(cfg, q_chunk=q_chunk, dtype=dtype)
+    if fam == "hybrid":
+        from repro.models import zamba
+        return zamba.build(cfg, q_chunk=q_chunk, dtype=dtype)
+    if fam == "encdec":
+        from repro.models import encdec
+        return encdec.build(cfg, q_chunk=q_chunk, dtype=dtype)
+    raise ValueError(f"unknown family {fam}")
+
+
+def build_arch(arch_id: str, smoke: bool = False, **kw) -> ModelBundle:
+    return build(get_config(arch_id, smoke=smoke), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (roofline MODEL_FLOPS)
+# ---------------------------------------------------------------------------
+
+def count_params_analytic(cfg: ModelConfig) -> int:
+    """Total parameters via eval_shape — exact, no allocation."""
+    return count_params(build(cfg))
+
+
+def count_active_params(cfg: ModelConfig) -> int:
+    """Active parameters per token (MoE: only top-k + shared experts)."""
+    total = count_params_analytic(cfg)
+    if cfg.moe is None or not cfg.moe.num_experts:
+        return total
+    mc = cfg.moe
+    per_expert = 3 * cfg.d_model * mc.expert_ff       # wi, wg, wd
+    n_moe_layers = cfg.num_layers - mc.first_dense_layers
+    inactive = n_moe_layers * (mc.num_experts - mc.top_k) * per_expert
+    return total - inactive

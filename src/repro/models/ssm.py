@@ -1,0 +1,245 @@
+"""Mamba2 blocks via the chunked SSD (state-space duality) algorithm.
+
+Training uses the chunkwise-parallel form (intra-chunk quadratic in the
+chunk length + inter-chunk ``lax.scan`` over carried states) — TPU-friendly:
+the intra-chunk einsums are MXU matmuls, the scan carries a small
+``(B, H, P, N)`` state. Decode is the O(1) recurrent step.
+
+Follows the reference ``ssd_minimal_discrete`` of the Mamba2 paper with one
+group (B/C shared across heads).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, SSMConfig
+from repro.models import layers
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x (..., L) → (..., L, L) with out[..., i, j] = sum_{j < t <= i} x_t
+    (−inf above the diagonal)."""
+    L = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    out = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, A, B, C, chunk: int,
+                initial_state: Optional[jax.Array] = None):
+    """Chunked SSD scan.
+
+    x: (b, l, h, p)   — already multiplied by dt
+    A: (b, l, h)      — dt * A_log-discretized (negative reals)
+    B, C: (b, l, n)   — one group, shared across heads
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-l) % chunk
+    if pad:
+        # pad with identity steps: A=0 (no decay), x=B=0 (no state update)
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        A = jnp.pad(A, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        l_orig = l
+        l = l + pad
+    c = l // chunk
+    xr = x.reshape(b, c, chunk, h, p)
+    Ar = A.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)   # (b,h,c,L)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+
+    A_cum = jnp.cumsum(Ar, axis=-1)                        # (b,h,c,L)
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(Ar))                            # (b,h,c,L,L)
+    Y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        Cr, Br, Lmat, xr)
+    # 2. per-chunk end states
+    decay_states = jnp.exp(A_cum[..., -1:] - A_cum)        # (b,h,c,L)
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        Br, decay_states, xr)              # (b,c,h,p,n)
+    # 3. inter-chunk recurrence
+    chunk_decay = jnp.exp(A_cum[..., -1])                  # (b,h,c)
+    init = (jnp.zeros((b, h, p, n), x.dtype) if initial_state is None
+            else initial_state)
+
+    def scan_body(carry, inp):
+        st, dec = inp                                      # (b,h,p,n), (b,h)
+        new = carry * dec[..., None, None] + st
+        return new, carry                                  # emit state *before*
+
+    _, prev_states = jax.lax.scan(
+        scan_body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    # prev_states: (c, b, h, p, n) — state entering each chunk
+    final_state = prev_states[-1] * chunk_decay[..., -1][..., None, None] \
+        + states[:, -1]
+    # 4. inter-chunk contribution to outputs
+    state_decay_out = jnp.exp(A_cum)                       # (b,h,c,L)
+    Y_off = jnp.einsum("bcln,cbhpn,bhcl->bclhp",
+                       Cr, prev_states, state_decay_out)
+    y = (Y_diag + Y_off).reshape(b, l, h, p)
+    if pad:
+        y = y[:, :l_orig]
+    return y, final_state
+
+
+def ssd_recurrent_step(state, x_t, A_t, B_t, C_t):
+    """One decode step.
+
+    state (b,h,p,n); x_t (b,h,p) (dt-scaled); A_t (b,h) (dt·A);
+    B_t, C_t (b,n). Returns (y (b,h,p), new_state)."""
+    decay = jnp.exp(A_t)[..., None, None]
+    new_state = state * decay + jnp.einsum("bhp,bn->bhpn", x_t, B_t)
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C_t)
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+class Mamba2Cache(NamedTuple):
+    conv: jax.Array     # (B, K-1, conv_channels) rolling window
+    ssm: jax.Array      # (B, H, P, N)
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    sc: SSMConfig = cfg.ssm
+    d = cfg.d_model
+    d_inner = sc.expand * d
+    H = d_inner // sc.head_dim
+    conv_ch = d_inner + 2 * sc.state_dim
+    ks = jax.random.split(key, 6)
+    return {
+        # order: [z (d_inner), xBC (conv_ch), dt (H)]
+        "in_proj": dense_init(ks[0], d, d_inner + conv_ch + H, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (sc.conv_kernel, conv_ch),
+                                     jnp.float32) * 0.1).astype(jnp.float32),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jnp.exp(jax.random.uniform(ks[2], (H,)) * 3.5 - 4.6),
+                     1e-4, 0.1))).astype(jnp.float32),
+        "ssm_norm": rmsnorm_init(d_inner),
+        "out_proj": dense_init(ks[3], d_inner, d,
+                               scale=1.0 / math.sqrt(d_inner), dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,S,C); w (K,C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i] for i in range(K))
+    return out + b
+
+
+def _split_proj(p, x, cfg: ModelConfig, dtype):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    conv_ch = d_inner + 2 * sc.state_dim
+    H = d_inner // sc.head_dim
+    zxbcdt = dense(x, p["in_proj"], dtype)
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner: d_inner + conv_ch]
+    dt_raw = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt_raw, d_inner, conv_ch, H
+
+
+def mamba2_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                 dtype=jnp.bfloat16,
+                 initial_cache: Optional[Mamba2Cache] = None,
+                 return_cache: bool = False):
+    """Full-sequence (train / prefill) Mamba2 block."""
+    sc: SSMConfig = cfg.ssm
+    Bb, S, _ = x.shape
+    z, xBC_pre, dt_raw, d_inner, conv_ch, H = _split_proj(p, x, cfg, dtype)
+    xBC = jax.nn.silu(_causal_conv(xBC_pre.astype(jnp.float32),
+                                   p["conv_w"], p["conv_b"])).astype(dtype)
+    xs = xBC[..., :d_inner]
+    Bmat = xBC[..., d_inner: d_inner + sc.state_dim].astype(jnp.float32)
+    Cmat = xBC[..., d_inner + sc.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    xh = xs.reshape(Bb, S, H, sc.head_dim).astype(jnp.float32)
+    y, final_state = ssd_chunked(
+        xh * dt[..., None], dt * A, Bmat, Cmat,
+        chunk=min(sc.chunk_size, S),
+        initial_state=None if initial_cache is None else initial_cache.ssm)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(Bb, S, d_inner).astype(dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.rmsnorm_eps)
+    out = dense(y, p["out_proj"], dtype)
+    if return_cache:
+        # conv state holds the last K-1 *pre-conv* inputs
+        K = sc.conv_kernel
+        conv_state = jnp.pad(
+            xBC_pre, ((0, 0), (max(K - 1 - S, 0), 0), (0, 0)))[:, -(K - 1):, :]
+        return out, Mamba2Cache(conv_state.astype(dtype), final_state)
+    return out
+
+
+def mamba2_decode(p: dict, x: jax.Array, cfg: ModelConfig, *,
+                  cache: Mamba2Cache, dtype=jnp.bfloat16):
+    """One-token decode. x (B,1,D)."""
+    sc: SSMConfig = cfg.ssm
+    Bb = x.shape[0]
+    z, xBC_raw, dt_raw, d_inner, conv_ch, H = _split_proj(p, x, cfg, dtype)
+    # rolling conv window
+    window = jnp.concatenate([cache.conv, xBC_raw.astype(dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+    xBC = jax.nn.silu(conv_out)[:, None, :].astype(dtype)
+    new_conv = window[:, 1:, :]
+    xs = xBC[..., :d_inner]
+    Bmat = xBC[0:, 0, d_inner: d_inner + sc.state_dim].astype(jnp.float32)
+    Cmat = xBC[0:, 0, d_inner + sc.state_dim:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xh = xs[:, 0].reshape(Bb, H, sc.head_dim).astype(jnp.float32)
+    y, new_ssm = ssd_recurrent_step(cache.ssm, xh * dt[..., None],
+                                    dt * A, Bmat, Cmat)
+    y = y + xh * p["D"][:, None]
+    y = y.reshape(Bb, 1, d_inner).astype(dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.rmsnorm_eps)
+    return dense(y, p["out_proj"], dtype), Mamba2Cache(new_conv, new_ssm)
+
+
+def mamba2_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    H = d_inner // sc.head_dim
+    conv_ch = d_inner + 2 * sc.state_dim
+    return Mamba2Cache(
+        jax.ShapeDtypeStruct((batch, sc.conv_kernel - 1, conv_ch), dtype),
+        jax.ShapeDtypeStruct((batch, H, sc.head_dim, sc.state_dim),
+                             jnp.float32),
+    )
+
+
+def ssd_reference(x, A, B, C, initial_state=None):
+    """O(L) sequential oracle for tests."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    state = (jnp.zeros((b, h, p, n)) if initial_state is None
+             else initial_state)
+    ys = []
+    for t in range(l):
+        y, state = ssd_recurrent_step(state, x[:, t], A[:, t],
+                                      B[:, t], C[:, t])
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

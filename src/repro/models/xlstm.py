@@ -1,0 +1,336 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory with recurrent mixing, sequential scan).
+
+mLSTM recurrence (per head, stabilized with running max ``m``):
+
+    C_t = f_t C_{t-1} + i_t v_t k_t^T        n_t = f_t n_{t-1} + i_t k_t
+    h_t = (C_t q̃_t) / max(|n_t·q̃_t|, 1)      q̃ = q / sqrt(d)
+
+with exponential input gate ``i = exp(ĩ)`` and sigmoid-forget in log space.
+Training uses a chunkwise form: intra-chunk quadratic attention-like matmuls
+plus an inter-chunk ``lax.scan`` over the (C, n, m) state — mirrors the
+Mamba2 SSD layout so both lower to MXU-friendly einsums.
+
+sLSTM is inherently sequential (recurrent weights mix the previous hidden
+state into the gates) — it runs as a ``lax.scan`` over time, vectorized over
+batch/heads, exactly as the architecture demands.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, XLSTMConfig
+from repro.models import layers
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# mLSTM core (chunkwise)
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    C: jax.Array      # (B, H, d, d)
+    n: jax.Array      # (B, H, d)
+    m: jax.Array      # (B, H) log-stabilizer
+
+
+def mlstm_chunked(q, k, v, logi, logf, chunk: int,
+                  initial: Optional[MLSTMState] = None):
+    """q,k,v: (B,S,H,d); logi/logf: (B,S,H). Returns (h, final_state)."""
+    B, S, H, d = q.shape
+    pad = (-S) % chunk
+    if pad:
+        z3 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        z2 = ((0, 0), (0, pad), (0, 0))
+        q, k, v = (jnp.pad(a, z3) for a in (q, k, v))
+        logi = jnp.pad(logi, z2, constant_values=-1e30)   # i=0: no update
+        logf = jnp.pad(logf, z2)                          # f=1: no decay
+    Sp = q.shape[1]
+    nc = Sp // chunk
+    qc = q.reshape(B, nc, chunk, H, d).astype(jnp.float32) / math.sqrt(d)
+    kc = k.reshape(B, nc, chunk, H, d).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, d).astype(jnp.float32)
+    li = logi.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)  # (B,H,c,L)
+    lf = logf.reshape(B, nc, chunk, H).transpose(0, 3, 1, 2)
+    b_cum = jnp.cumsum(lf, axis=-1)                           # (B,H,c,L)
+
+    if initial is None:
+        C0 = jnp.zeros((B, H, d, d), jnp.float32)
+        n0 = jnp.zeros((B, H, d), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = initial
+
+    # intra-chunk log-decay matrix D[t,s] = b_t − b_s + logi_s  (s ≤ t)
+    Dlog = (b_cum[..., :, None] - b_cum[..., None, :]
+            + li[..., None, :])                               # (B,H,c,L,L)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    Dlog = jnp.where(tri, Dlog, -jnp.inf)
+    m_intra = jnp.max(Dlog, axis=-1)                          # (B,H,c,L)
+
+    # scan over chunks, carrying (C', n', m)
+    def body(carry, idx):
+        C, n, m_prev = carry
+        dl = Dlog[:, :, idx]            # (B,H,L,L)
+        bc = b_cum[:, :, idx]           # (B,H,L)
+        m_inter = m_prev[..., None] + bc
+        m_t = jnp.maximum(m_intra[:, :, idx], m_inter)        # (B,H,L)
+        m_t = jnp.maximum(m_t, -1e30)
+        dexp = jnp.exp(dl - m_t[..., None])                   # (B,H,L,L)
+        qi = qc[:, idx]                                       # (B,L,H,d)
+        ki = kc[:, idx]
+        vi = vc[:, idx]
+        s = jnp.einsum("blhd,bshd->bhls", qi, ki)             # (B,H,L,L)
+        numer = jnp.einsum("bhls,bshd->blhd", dexp * s, vi)
+        numer = numer + jnp.exp(m_inter - m_t)[..., None].transpose(0, 2, 1, 3) \
+            * jnp.einsum("blhd,bhde->blhe", qi, C)
+        denom = jnp.einsum("bhls->bhl", dexp * s)
+        denom = denom + jnp.exp(m_inter - m_t) \
+            * jnp.einsum("blhd,bhd->bhl", qi, n)
+        h = numer / jnp.maximum(
+            jnp.abs(denom), jnp.exp(-m_t))[..., None].transpose(0, 2, 1, 3)
+        # state update to chunk end
+        bL = bc[..., -1]                                      # (B,H)
+        m_new = jnp.maximum(m_prev + bL,
+                            jnp.max(bL[..., None] - bc + li[:, :, idx],
+                                    axis=-1))
+        decay_in = jnp.exp(bL[..., None] - bc + li[:, :, idx]
+                           - m_new[..., None])                # (B,H,L)
+        C_new = jnp.exp(m_prev + bL - m_new)[..., None, None] * C + \
+            jnp.einsum("bhl,blhd,blhe->bhde", decay_in, ki, vi)
+        n_new = jnp.exp(m_prev + bL - m_new)[..., None] * n + \
+            jnp.einsum("bhl,blhd->bhd", decay_in, ki)
+        return (C_new, n_new, m_new), h
+
+    (Cf, nf, mf), hs = jax.lax.scan(body, (C0, n0, m0), jnp.arange(nc))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, Sp, H, d)
+    if pad:
+        h = h[:, :S]
+    return h.astype(q.dtype), MLSTMState(Cf, nf, mf)
+
+
+def mlstm_step(state: MLSTMState, q, k, v, logi, logf):
+    """One decode step. q,k,v (B,H,d); logi/logf (B,H)."""
+    C, n, m_prev = state
+    d = q.shape[-1]
+    qf = q.astype(jnp.float32) / math.sqrt(d)
+    m_t = jnp.maximum(logf + m_prev, logi)
+    f_ = jnp.exp(logf + m_prev - m_t)
+    i_ = jnp.exp(logi - m_t)
+    C_new = f_[..., None, None] * C + \
+        i_[..., None, None] * jnp.einsum("bhd,bhe->bhde",
+                                         k.astype(jnp.float32),
+                                         v.astype(jnp.float32))
+    n_new = f_[..., None] * n + i_[..., None] * k.astype(jnp.float32)
+    numer = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                        jnp.exp(-m_t))
+    return (numer / denom[..., None]).astype(q.dtype), \
+        MLSTMState(C_new, n_new, m_t)
+
+
+def mlstm_reference(q, k, v, logi, logf, initial=None):
+    """Sequential oracle."""
+    B, S, H, d = q.shape
+    state = initial or MLSTMState(
+        jnp.zeros((B, H, d, d)), jnp.zeros((B, H, d)),
+        jnp.full((B, H), -1e30))
+    hs = []
+    for t in range(S):
+        h, state = mlstm_step(state, q[:, t], k[:, t], v[:, t],
+                              logi[:, t], logf[:, t])
+        hs.append(h)
+    return jnp.stack(hs, 1), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM core (sequential)
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array      # (B, D)
+    n: jax.Array      # (B, D)
+    h: jax.Array      # (B, D)
+    m: jax.Array      # (B, D)
+
+
+def slstm_scan(gates_x, R, state: SLSTMState, num_heads: int):
+    """gates_x: (B,S,4D) pre-activations from the input; R: (4, H, dh, dh)
+    block-diagonal recurrent weights. Order: [i, f, z, o]."""
+    B, S, D4 = gates_x.shape
+    D = D4 // 4
+    dh = D // num_heads
+
+    def step(st, gx):
+        c, n, h, m = st
+        hh = h.reshape(B, num_heads, dh)
+        rec = jnp.stack([
+            jnp.einsum("bhd,hde->bhe", hh, R[g]).reshape(B, D)
+            for g in range(4)], axis=-1)                      # (B,D,4)
+        g = gx.reshape(B, D, 4) + rec
+        it, ft, zt, ot = g[..., 0], g[..., 1], g[..., 2], g[..., 3]
+        m_new = jnp.maximum(ft + m, it)
+        i_ = jnp.exp(it - m_new)
+        f_ = jnp.exp(ft + m - m_new)
+        z = jnp.tanh(zt)
+        o = jax.nn.sigmoid(ot)
+        c_new = f_ * c + i_ * z
+        n_new = f_ * n + i_
+        h_new = o * c_new / jnp.maximum(n_new, 1.0)
+        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+    gx_seq = gates_x.astype(jnp.float32).reshape(B, S, D, 4) \
+        .transpose(1, 0, 2, 3).reshape(S, B, D * 4)
+    final, hs = jax.lax.scan(step, state, gx_seq)
+    return hs.transpose(1, 0, 2), final                       # (B,S,D)
+
+
+def slstm_init_state(batch: int, d: int) -> SLSTMState:
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+class XLSTMCache(NamedTuple):
+    kind: int                 # 0 = mLSTM, 1 = sLSTM (static via pytree aux)
+    mlstm: MLSTMState
+    slstm: SLSTMState
+
+
+def mlstm_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    xc: XLSTMConfig = cfg.xlstm
+    d = cfg.d_model
+    inner = int(xc.proj_factor * d)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": rmsnorm_init(d),
+        "w_up": dense_init(ks[0], d, 2 * inner, dtype=dtype),
+        "wq": dense_init(ks[1], inner, inner, dtype=dtype),
+        "wk": dense_init(ks[2], inner, inner, dtype=dtype),
+        "wv": dense_init(ks[3], inner, inner, dtype=dtype),
+        "w_gates": dense_init(ks[4], inner, 2 * H, scale=0.02, dtype=dtype),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((H,)), jnp.linspace(3.0, 6.0, H)]).astype(jnp.float32),
+        "out_norm": rmsnorm_init(inner),
+        "w_down": dense_init(ks[5], inner, d,
+                             scale=1.0 / math.sqrt(inner), dtype=dtype),
+    }
+
+
+def _mlstm_qkvg(p, u, cfg, dtype):
+    xc = cfg.xlstm
+    B, S, inner = u.shape
+    H = cfg.num_heads
+    dh = inner // H
+    q = dense(u, p["wq"], dtype).reshape(B, S, H, dh)
+    k = dense(u, p["wk"], dtype).reshape(B, S, H, dh)
+    v = dense(u, p["wv"], dtype).reshape(B, S, H, dh)
+    gates = dense(u, p["w_gates"], jnp.float32) + p["gate_bias"]
+    logi = gates[..., :H]
+    logf = jax.nn.log_sigmoid(gates[..., H:])
+    return q, k, v, logi, logf
+
+
+def mlstm_block_apply(p, x, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+                      cache: Optional[MLSTMState] = None,
+                      return_cache: bool = False):
+    xc = cfg.xlstm
+    B, S, d = x.shape
+    u = dense(rmsnorm(x, p["norm"], cfg.rmsnorm_eps), p["w_up"], dtype)
+    inner = u.shape[-1] // 2
+    u_m, u_g = u[..., :inner], u[..., inner:]
+    q, k, v, logi, logf = _mlstm_qkvg(p, u_m, cfg, dtype)
+    h, final = mlstm_chunked(q, k, v, logi, logf,
+                             chunk=min(xc.chunk_size, max(S, 2)),
+                             initial=cache)
+    h = h.reshape(B, S, inner)
+    h = rmsnorm(h, p["out_norm"], cfg.rmsnorm_eps) * jax.nn.silu(u_g)
+    out = x + dense(h, p["w_down"], dtype)
+    if return_cache:
+        return out, final
+    return out
+
+
+def mlstm_block_decode(p, x, cfg: ModelConfig, *, cache: MLSTMState,
+                       dtype=jnp.bfloat16):
+    B = x.shape[0]
+    u = dense(rmsnorm(x, p["norm"], cfg.rmsnorm_eps), p["w_up"], dtype)
+    inner = u.shape[-1] // 2
+    u_m, u_g = u[..., :inner], u[..., inner:]
+    q, k, v, logi, logf = _mlstm_qkvg(p, u_m, cfg, dtype)
+    h, new_state = mlstm_step(cache, q[:, 0], k[:, 0], v[:, 0],
+                              logi[:, 0], logf[:, 0])
+    h = h.reshape(B, 1, inner)
+    h = rmsnorm(h, p["out_norm"], cfg.rmsnorm_eps) * jax.nn.silu(u_g)
+    return x + dense(h, p["w_down"], dtype), new_state
+
+
+def slstm_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 6)
+    f_ff = int(4 * d / 3 / 64) * 64 or 4 * d // 3
+    return {
+        "norm": rmsnorm_init(d),
+        "w_gates": dense_init(ks[0], d, 4 * d, dtype=dtype),
+        "r_gates": (jax.random.normal(ks[1], (4, H, dh, dh), jnp.float32)
+                    / math.sqrt(dh)).astype(jnp.float32),
+        "gate_bias": jnp.zeros((4 * d,), jnp.float32),
+        "out_norm": rmsnorm_init(d),
+        "ffn": layers.ffn_init(ks[2], d, f_ff, dtype=dtype),
+        "ffn_norm": rmsnorm_init(d),
+    }
+
+
+def slstm_block_apply(p, x, cfg: ModelConfig, *, dtype=jnp.bfloat16,
+                      cache: Optional[SLSTMState] = None,
+                      return_cache: bool = False):
+    B, S, d = x.shape
+    u = rmsnorm(x, p["norm"], cfg.rmsnorm_eps)
+    gx = dense(u, p["w_gates"], jnp.float32) + p["gate_bias"]
+    st = cache if cache is not None else slstm_init_state(B, d)
+    hs, final = slstm_scan(gx, p["r_gates"], st, cfg.num_heads)
+    h = rmsnorm(hs.astype(dtype), p["out_norm"], cfg.rmsnorm_eps)
+    y = x + h
+    y = y + layers.ffn_apply(p["ffn"],
+                             rmsnorm(y, p["ffn_norm"], cfg.rmsnorm_eps),
+                             cfg.ffn_activation, dtype)
+    if return_cache:
+        return y, final
+    return y
+
+
+def slstm_block_decode(p, x, cfg: ModelConfig, *, cache: SLSTMState,
+                       dtype=jnp.bfloat16):
+    y, final = slstm_block_apply(x=x, p=p, cfg=cfg, dtype=dtype, cache=cache,
+                                 return_cache=True)
+    return y, final
+
+
+def is_slstm_layer(layer_idx: int, cfg: ModelConfig) -> bool:
+    xc = cfg.xlstm
+    return xc.slstm_every > 0 and (layer_idx + 1) % xc.slstm_every == 0
+
+
+def mlstm_cache_spec(cfg: ModelConfig, batch: int):
+    inner = int(cfg.xlstm.proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = inner // H
+    return MLSTMState(
+        jax.ShapeDtypeStruct((batch, H, dh, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H), jnp.float32))
+
+
+def slstm_cache_spec(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return SLSTMState(*[jax.ShapeDtypeStruct((batch, d), jnp.float32)] * 4)

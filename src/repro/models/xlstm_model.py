@@ -1,0 +1,135 @@
+"""xLSTM language model bundle: superblocks of (slstm_every−1) mLSTM blocks
+followed by one sLSTM block (paper's xLSTM[a:b] notation)."""
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeCell
+from repro.models import layers, xlstm
+from repro.models.base import ModelBundle, SegmentDef
+from repro.models.layers import cross_entropy, dense, dense_init, \
+    embed_init, rmsnorm, rmsnorm_init
+
+
+class XGroupCache(NamedTuple):
+    mlstm: Any                      # stacked MLSTMState (n_m, ...)
+    slstm: xlstm.SLSTMState
+
+
+def group_init(key, cfg: ModelConfig, n_m: int, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "mlstm": layers.stacked_init(
+            functools.partial(xlstm.mlstm_block_init, cfg=cfg, dtype=dtype),
+            k1, n_m),
+        "slstm": xlstm.slstm_block_init(k2, cfg, dtype),
+    }
+
+
+def group_apply(lp, carry, ctx, cfg: ModelConfig, *, dtype):
+    h = carry["h"]
+
+    def body(hc, mp):
+        return xlstm.mlstm_block_apply(mp, hc, cfg, dtype=dtype), None
+
+    from repro.models.base import scan_layers
+    h, _ = scan_layers(body, h, lp["mlstm"])
+    h = xlstm.slstm_block_apply(lp["slstm"], h, cfg, dtype=dtype)
+    return {**carry, "h": h}
+
+
+def group_prefill(lp, carry, ctx, cfg: ModelConfig, *, dtype):
+    h = carry["h"]
+
+    def body(hc, mp):
+        out, state = xlstm.mlstm_block_apply(mp, hc, cfg, dtype=dtype,
+                                             return_cache=True)
+        return out, state
+
+    from repro.models.base import scan_layers
+    h, mstates = scan_layers(body, h, lp["mlstm"])
+    h, sstate = xlstm.slstm_block_apply(lp["slstm"], h, cfg, dtype=dtype,
+                                        return_cache=True)
+    return {**carry, "h": h}, XGroupCache(mstates, sstate)
+
+
+def group_decode(lp, carry, cache: XGroupCache, ctx, cfg: ModelConfig, *,
+                 dtype):
+    h = carry["h"]
+
+    def body(hc, inp):
+        mp, st = inp
+        out, new = xlstm.mlstm_block_decode(mp, hc, cfg, cache=st,
+                                            dtype=dtype)
+        return out, new
+
+    from repro.models.base import scan_layers
+    h, new_m = scan_layers(body, h, (lp["mlstm"], cache.mlstm))
+    h, new_s = xlstm.slstm_block_decode(lp["slstm"], h, cfg,
+                                        cache=cache.slstm, dtype=dtype)
+    return {**carry, "h": h}, XGroupCache(new_m, new_s)
+
+
+def build(cfg: ModelConfig, *, q_chunk: int = 1024,
+          dtype=jnp.bfloat16) -> ModelBundle:
+    xc = cfg.xlstm
+    every = xc.slstm_every or cfg.num_layers
+    n_groups = max(cfg.num_layers // every, 1)
+    n_m = every - 1
+
+    def init_params(key):
+        ks = jax.random.split(key, 4)
+        return {
+            "embedding": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "seg0_xlstm": layers.stacked_init(
+                functools.partial(group_init, cfg=cfg, n_m=n_m),
+                ks[1], n_groups),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "head": dense_init(ks[2], cfg.d_model, cfg.vocab_size,
+                               scale=1.0 / math.sqrt(cfg.d_model)),
+        }
+
+    def embed(params, batch):
+        emb = layers.materialize(params["embedding"], dtype)
+        h = jnp.take(emb, batch["tokens"], axis=0)
+        carry = {"h": h, "aux": jnp.zeros((), jnp.float32)}
+        return carry, {}
+
+    def cache_spec(batch, max_len, cdtype):
+        mspec = xlstm.mlstm_cache_spec(cfg, batch)
+        mstack = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_m,) + s.shape, s.dtype), mspec)
+        return XGroupCache(mstack, xlstm.slstm_cache_spec(cfg, batch))
+
+    segments = (SegmentDef(
+        name="xlstm", n_layers=n_groups,
+        apply=functools.partial(group_apply, cfg=cfg, dtype=dtype),
+        prefill=functools.partial(group_prefill, cfg=cfg, dtype=dtype),
+        decode=functools.partial(group_decode, cfg=cfg, dtype=dtype),
+        cache_spec=cache_spec,
+    ),)
+
+    def head_loss(params, carry, batch):
+        h = rmsnorm(carry["h"], params["final_norm"], cfg.rmsnorm_eps)
+        logits = dense(h, params["head"], dtype)
+        loss, metrics = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return loss, {**metrics, "ce_loss": loss}
+
+    def head_logits(params, carry):
+        h = rmsnorm(carry["h"][:, -1:], params["final_norm"],
+                    cfg.rmsnorm_eps)
+        return dense(h, params["head"], dtype)
+
+    def input_specs(cell: ShapeCell):
+        B, S = cell.global_batch, cell.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    return ModelBundle(cfg=cfg, init_params=init_params, embed=embed,
+                       segments=segments, head_loss=head_loss,
+                       head_logits=head_logits, input_specs=input_specs)

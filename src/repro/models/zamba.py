@@ -1,0 +1,261 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block applied
+every ``attn_every`` layers with per-site LoRA adapters.
+
+Layout: ``num_layers`` Mamba2 blocks grouped into superblocks of
+``attn_every``; each superblock ends with one invocation of the shared
+attention+FFN block on ``concat(h, x0)`` (x0 = the original embedding, the
+Zamba "global residual"). Shared weights live once in the params tree and are
+threaded to every site through ``ctx``; per-site LoRA A/B pairs are stacked
+per superblock — exactly matching the weight-sharing structure, so GaLore
+assigns the shared matrices a single gradient subspace.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeCell
+from repro.models import attention, layers, ssm
+from repro.models.base import ModelBundle, SegmentDef
+from repro.models.layers import cross_entropy, dense, dense_init, \
+    embed_init, ffn_apply, ffn_init, rmsnorm, rmsnorm_init
+
+
+def _lora_init(key, in_dim, out_dim, rank):
+    ka, kb = jax.random.split(key)
+    return {
+        "A": (jax.random.normal(ka, (in_dim, rank), jnp.float32)
+              / math.sqrt(in_dim)),
+        "B": jnp.zeros((rank, out_dim), jnp.float32),
+    }
+
+
+def _lora_apply(p, x, dtype):
+    return (x @ p["A"].astype(dtype)) @ p["B"].astype(dtype)
+
+
+def shared_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """The single shared attention+FFN block (operates on 2·d → d)."""
+    ks = jax.random.split(key, 4)
+    return {
+        "fuse": dense_init(ks[0], 2 * cfg.d_model, cfg.d_model, dtype=dtype),
+        "norm": rmsnorm_init(2 * cfg.d_model),
+        "attn": attention.gqa_init(ks[1], cfg, dtype),
+        "ffn_norm": rmsnorm_init(cfg.d_model),
+        "ffn": ffn_init(ks[2], cfg.d_model, cfg.d_ff, dtype=dtype),
+    }
+
+
+def superblock_init(key, cfg: ModelConfig, n_mamba: int,
+                    dtype=jnp.float32) -> dict:
+    hc = cfg.hybrid
+    ks = jax.random.split(key, 4)
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    p = {
+        "mamba_norms": jnp.zeros((n_mamba, cfg.d_model), jnp.float32),
+        "mamba": layers.stacked_init(
+            functools.partial(ssm.mamba2_init, cfg=cfg, dtype=dtype),
+            ks[0], n_mamba),
+        # per-site LoRA on the shared block's q and o projections
+        "lora_q": _lora_init(ks[1], cfg.d_model, H * hd,
+                             hc.shared_lora_rank),
+        "lora_o": _lora_init(ks[2], H * hd, cfg.d_model,
+                             hc.shared_lora_rank),
+        "site_out": dense_init(ks[3], cfg.d_model, cfg.d_model,
+                               scale=0.02, dtype=dtype),
+    }
+    return p
+
+
+def _shared_site_apply(shared, lp, h, x0, positions, cfg: ModelConfig,
+                       dtype, q_chunk):
+    """One invocation of the shared block with this site's LoRA."""
+    u = jnp.concatenate([h, x0], axis=-1)
+    u = rmsnorm(u, shared["norm"], cfg.rmsnorm_eps)
+    u = dense(u, shared["fuse"], dtype)
+    # attention with LoRA-augmented q / o
+    B, S, _ = u.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ap = shared["attn"]
+    q = (dense(u, ap["wq"], dtype)
+         + _lora_apply(lp["lora_q"], u, dtype)).reshape(B, S, H, hd)
+    k = dense(u, ap["wk"], dtype).reshape(B, S, KH, hd)
+    v = dense(u, ap["wv"], dtype).reshape(B, S, KH, hd)
+    sin, cos = layers.rope_angles(positions, hd, cfg.rope_theta)
+    q = layers.apply_rope(q, sin, cos)
+    k = layers.apply_rope(k, sin, cos)
+    o = attention.chunked_attention(q, k, v, causal=True, q_chunk=q_chunk)
+    o = o.reshape(B, S, H * hd)
+    a = dense(o, ap["wo"], dtype) + _lora_apply(lp["lora_o"], o, dtype)
+    u = u + a
+    f = ffn_apply(shared["ffn"],
+                  rmsnorm(u, shared["ffn_norm"], cfg.rmsnorm_eps),
+                  cfg.ffn_activation, dtype)
+    return dense(u + f, lp["site_out"], dtype), (k, v)
+
+
+def superblock_apply(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
+    h = carry["h"]
+
+    def mamba_body(hc, inp):
+        norm_w, mp = inp
+        return hc + ssm.mamba2_apply(
+            mp, rmsnorm(hc, norm_w, cfg.rmsnorm_eps), cfg, dtype=dtype), None
+
+    from repro.models.base import scan_layers
+    h, _ = scan_layers(mamba_body, h, (lp["mamba_norms"], lp["mamba"]))
+    site, _ = _shared_site_apply(ctx["shared"], lp, h, carry["x0"],
+                                 ctx["positions"], cfg, dtype, q_chunk)
+    return {**carry, "h": h + site}
+
+
+class ZambaCache(NamedTuple):
+    mamba: Any          # stacked Mamba2Cache (n_mamba, ...)
+    kv: Tuple[jax.Array, jax.Array]
+
+
+def superblock_prefill(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
+    h = carry["h"]
+
+    def mamba_body(hc, inp):
+        norm_w, mp = inp
+        out, cache = ssm.mamba2_apply(
+            mp, rmsnorm(hc, norm_w, cfg.rmsnorm_eps), cfg, dtype=dtype,
+            return_cache=True)
+        return hc + out, cache
+
+    from repro.models.base import scan_layers
+    h, mcaches = scan_layers(mamba_body, h,
+                             (lp["mamba_norms"], lp["mamba"]))
+    site, kv = _shared_site_apply(ctx["shared"], lp, h, carry["x0"],
+                                  ctx["positions"], cfg, dtype, q_chunk)
+    # pad kv caches to max_len
+    max_len = ctx["max_len"]
+    k, v = kv
+    pad = max_len - k.shape[1]
+    k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return {**carry, "h": h + site}, ZambaCache(mcaches, (k, v))
+
+
+def superblock_decode(lp, carry, cache: ZambaCache, ctx,
+                      cfg: ModelConfig, *, dtype):
+    h = carry["h"]
+
+    def mamba_body(hc, inp):
+        norm_w, mp, mcache = inp
+        out, new_cache = ssm.mamba2_decode(
+            mp, rmsnorm(hc, norm_w, cfg.rmsnorm_eps), cfg, cache=mcache,
+            dtype=dtype)
+        return hc + out, new_cache
+
+    from repro.models.base import scan_layers
+    h, new_mcaches = scan_layers(
+        mamba_body, h, (lp["mamba_norms"], lp["mamba"], cache.mamba))
+
+    # shared attention site, decode form
+    shared = ctx["shared"]
+    length = ctx["length"]
+    u = jnp.concatenate([h, carry["x0"]], axis=-1)
+    u = rmsnorm(u, shared["norm"], cfg.rmsnorm_eps)
+    u = dense(u, shared["fuse"], dtype)
+    B = u.shape[0]
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ap = shared["attn"]
+    q = (dense(u, ap["wq"], dtype)
+         + _lora_apply(lp["lora_q"], u, dtype)).reshape(B, 1, H, hd)
+    k = dense(u, ap["wk"], dtype).reshape(B, 1, KH, hd)
+    v = dense(u, ap["wv"], dtype).reshape(B, 1, KH, hd)
+    sin, cos = layers.rope_angles(length[:, None].astype(jnp.float32), hd,
+                                  cfg.rope_theta)
+    q = layers.apply_rope(q, sin, cos)
+    k = layers.apply_rope(k, sin, cos)
+    k_cache, v_cache = cache.kv
+    oh = jax.nn.one_hot(length, k_cache.shape[1], dtype=k.dtype)
+    k_cache = k_cache * (1 - oh[..., None, None]) + oh[..., None, None] * k
+    v_cache = v_cache * (1 - oh[..., None, None]) + oh[..., None, None] * v
+    o = attention.decode_attention(q, k_cache, v_cache, length + 1)
+    o = o.reshape(B, 1, H * hd)
+    a = dense(o, ap["wo"], dtype) + _lora_apply(lp["lora_o"], o, dtype)
+    u = u + a
+    f = ffn_apply(shared["ffn"],
+                  rmsnorm(u, shared["ffn_norm"], cfg.rmsnorm_eps),
+                  cfg.ffn_activation, dtype)
+    site = dense(u + f, lp["site_out"], dtype)
+    return {**carry, "h": h + site}, ZambaCache(new_mcaches,
+                                                (k_cache, v_cache))
+
+
+def build(cfg: ModelConfig, *, q_chunk: int = 1024,
+          dtype=jnp.bfloat16) -> ModelBundle:
+    hc = cfg.hybrid
+    n_sb = cfg.num_layers // hc.attn_every
+    n_mamba_per = hc.attn_every - 1      # one site per superblock
+
+    def init_params(key):
+        ks = jax.random.split(key, 5)
+        return {
+            "embedding": embed_init(ks[0], cfg.vocab_size, cfg.d_model),
+            "shared_attn": shared_block_init(ks[1], cfg),
+            "seg0_zamba": layers.stacked_init(
+                functools.partial(superblock_init, cfg=cfg,
+                                  n_mamba=n_mamba_per),
+                ks[2], n_sb),
+            "final_norm": rmsnorm_init(cfg.d_model),
+            "head": dense_init(ks[3], cfg.d_model, cfg.vocab_size,
+                               scale=1.0 / math.sqrt(cfg.d_model)),
+        }
+
+    def embed(params, batch):
+        emb = layers.materialize(params["embedding"], dtype)
+        h = jnp.take(emb, batch["tokens"], axis=0)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+        carry = {"h": h, "x0": h, "aux": jnp.zeros((), jnp.float32)}
+        ctx = {"positions": positions, "shared": params["shared_attn"]}
+        return carry, ctx
+
+    def cache_spec(batch, max_len, cdtype):
+        mspec = ssm.mamba2_cache_spec(cfg, batch, cdtype)
+        mstack = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((n_mamba_per,) + s.shape,
+                                           s.dtype), mspec)
+        KH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        kv = (jax.ShapeDtypeStruct((batch, max_len, KH, hd), cdtype),
+              jax.ShapeDtypeStruct((batch, max_len, KH, hd), cdtype))
+        return ZambaCache(mstack, kv)
+
+    segments = (SegmentDef(
+        name="zamba", n_layers=n_sb,
+        apply=functools.partial(superblock_apply, cfg=cfg, dtype=dtype,
+                                q_chunk=q_chunk),
+        prefill=functools.partial(superblock_prefill, cfg=cfg, dtype=dtype,
+                                  q_chunk=q_chunk),
+        decode=functools.partial(superblock_decode, cfg=cfg, dtype=dtype),
+        cache_spec=cache_spec,
+    ),)
+
+    def head_loss(params, carry, batch):
+        h = rmsnorm(carry["h"], params["final_norm"], cfg.rmsnorm_eps)
+        logits = dense(h, params["head"], dtype)
+        loss, metrics = cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+        return loss + carry["aux"], {**metrics, "ce_loss": loss}
+
+    def head_logits(params, carry):
+        h = rmsnorm(carry["h"][:, -1:], params["final_norm"],
+                    cfg.rmsnorm_eps)
+        return dense(h, params["head"], dtype)
+
+    def input_specs(cell: ShapeCell):
+        B, S = cell.global_batch, cell.seq_len
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+    return ModelBundle(cfg=cfg, init_params=init_params, embed=embed,
+                       segments=segments, head_loss=head_loss,
+                       head_logits=head_logits, input_specs=input_specs)

@@ -1,0 +1,142 @@
+"""Serving runtime: batched prefill + single-token decode over the generic
+segment contract, with stacked per-layer caches.
+
+``DecodeState`` is a pure pytree → the decode step jits/pjits cleanly; cache
+sharding (see ``repro.serve.shard``) puts the KV time axis on the model mesh
+axis for long contexts (context-parallel decode) and batch on data.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+from repro.models.base import ModelBundle
+
+
+class DecodeState(NamedTuple):
+    caches: Dict[str, Any]          # {seg_key: stacked per-layer caches}
+    lengths: jax.Array              # (B,) valid positions
+    extras: Dict[str, Any]          # persistent carry entries (e.g. memory)
+
+
+def _deq(tree):
+    return quant.tree_dequantize(tree)
+
+
+def build_prefill(bundle: ModelBundle, max_len: int):
+    """Returns prefill(params, batch) -> (last_logits, DecodeState)."""
+    def prefill(params, batch):
+        carry, ctx = bundle.embed(params, batch)
+        ctx = {**ctx, "max_len": max_len}
+        caches: Dict[str, Any] = {}
+        for i, seg in enumerate(bundle.segments):
+            key = bundle.seg_key(i)
+            if seg.pre is not None:
+                carry = seg.pre(params, carry, ctx)
+            if seg.prefill is None:
+                def body(c, lp, _seg=seg):
+                    return _seg.apply(_deq(lp), c, ctx), None
+                from repro.models.base import scan_layers
+                carry, _ = scan_layers(body, carry, params[key])
+            else:
+                def body(c, lp, _seg=seg):
+                    return _seg.prefill(_deq(lp), c, ctx)
+                from repro.models.base import scan_layers
+                carry, cache = scan_layers(body, carry, params[key])
+                caches[key] = cache
+        logits = bundle.head_logits(params, carry)
+        B = logits.shape[0]
+        prompt_len = batch["tokens"].shape[1]
+        lengths = jnp.full((B,), prompt_len, jnp.int32)
+        extras = {k: carry[k] for k in bundle.decode_extras}
+        return logits, DecodeState(caches, lengths, extras)
+
+    return prefill
+
+
+def build_decode(bundle: ModelBundle):
+    """Returns decode(params, state, tokens (B,1)) -> (logits, new_state)."""
+    def decode(params, state: DecodeState, tokens):
+        if bundle.embed_decode is not None:
+            carry, ctx = bundle.embed_decode(params, tokens, state.extras)
+        else:
+            carry, ctx = bundle.embed(params, {"tokens": tokens})
+            carry = {**carry, **state.extras}
+        ctx = {**ctx, "length": state.lengths}
+        new_caches: Dict[str, Any] = {}
+        for i, seg in enumerate(bundle.segments):
+            key = bundle.seg_key(i)
+            if seg.decode is None or key not in state.caches:
+                continue
+            def body(c, xs, _seg=seg):
+                lp, cache = xs
+                new_c, new_cache = _seg.decode(_deq(lp), c, cache, ctx)
+                return new_c, new_cache
+            from repro.models.base import scan_layers
+            carry, new_cache = scan_layers(
+                body, carry, (params[key], state.caches[key]))
+            new_caches[key] = new_cache
+        logits = bundle.head_logits(params, carry)
+        return logits, DecodeState(new_caches, state.lengths + 1,
+                                   state.extras)
+
+    return decode
+
+
+def sample(logits, key, temperature: float = 0.0):
+    """Greedy (T=0) or temperature sampling on (B, 1, V) logits."""
+    lf = logits[:, -1, :].astype(jnp.float32)
+    if temperature <= 0.0:
+        return jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lf / temperature, axis=-1) \
+        .astype(jnp.int32)
+
+
+def generate(bundle: ModelBundle, params, batch, *, steps: int,
+             max_len: int, temperature: float = 0.0, key=None):
+    """Prefill + `steps` greedy/temperature decode steps (host loop)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    prefill = jax.jit(build_prefill(bundle, max_len))
+    decode = jax.jit(build_decode(bundle))
+    logits, state = prefill(params, batch)
+    toks = []
+    tok = sample(logits, key, temperature)
+    for s in range(steps):
+        toks.append(tok)
+        logits, state = decode(params, state, tok[:, None])
+        key = jax.random.fold_in(key, s)
+        tok = sample(logits, key, temperature)
+    toks.append(tok)
+    return jnp.stack(toks, axis=1), state   # (B, steps+1)
+
+
+# ---------------------------------------------------------------------------
+# Abstract decode-state (for the dry-run: no allocation)
+# ---------------------------------------------------------------------------
+
+def abstract_decode_state(bundle: ModelBundle, batch: int, max_len: int,
+                          dtype=jnp.bfloat16) -> DecodeState:
+    caches = {}
+    for i, seg in enumerate(bundle.segments):
+        if seg.cache_spec is None or seg.decode is None:
+            continue
+        per_layer = seg.cache_spec(batch, max_len, dtype)
+        caches[bundle.seg_key(i)] = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct((seg.n_layers,) + s.shape,
+                                           s.dtype), per_layer)
+    extras = {}
+    if "memory" in bundle.decode_extras:
+        # encoder memory length: seq // DEC_RATIO convention (see encdec)
+        from repro.models.encdec import DEC_RATIO
+        extras["memory"] = jax.ShapeDtypeStruct(
+            (batch, max(max_len // DEC_RATIO, 16), bundle.cfg.d_model),
+            dtype)
+    return DecodeState(
+        caches=caches,
+        lengths=jax.ShapeDtypeStruct((batch,), jnp.int32),
+        extras=extras,
+    )

@@ -1,0 +1,54 @@
+"""Sharding for serving state (KV caches, recurrent states).
+
+Heuristic per cache leaf: dim 1 is batch (dim 0 is the stacked layer axis) —
+shard it over data when divisible; then shard the LARGEST remaining dim over
+model when divisible (for attention caches that is the time axis →
+context-parallel decode; for SSM states it is heads/channels). GSPMD turns
+the seq-sharded attention contraction into partial-softmax + all-reduce —
+the LSE-combine pattern of ring/context-parallel decode."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import batch_axes
+from repro.serve.engine import DecodeState
+
+
+def _leaf_spec(shape: Tuple[int, ...], mesh: Mesh,
+               batch_dim: int = 1) -> P:
+    parts = [None] * len(shape)
+    dp = batch_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    if len(shape) > batch_dim and dp and shape[batch_dim] % dp_total == 0 \
+            and shape[batch_dim] > 1:
+        parts[batch_dim] = dp
+    if "model" in mesh.axis_names:
+        msize = mesh.shape["model"]
+        # largest unsharded dim divisible by the model axis
+        cands = [(shape[i], i) for i in range(len(shape))
+                 if parts[i] is None and i != batch_dim
+                 and shape[i] % msize == 0 and shape[i] >= msize]
+        if cands:
+            _, idx = max(cands)
+            parts[idx] = "model"
+    return P(*parts)
+
+
+def decode_state_sharding(state_abs: DecodeState, mesh: Mesh) -> DecodeState:
+    def one(leaf):
+        return NamedSharding(mesh, _leaf_spec(tuple(leaf.shape), mesh))
+
+    caches = jax.tree_util.tree_map(one, state_abs.caches)
+    extras = jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, _leaf_spec(tuple(l.shape), mesh,
+                                                 batch_dim=0)),
+        state_abs.extras)
+    return DecodeState(
+        caches=caches,
+        lengths=NamedSharding(mesh, P()),
+        extras=extras,
+    )

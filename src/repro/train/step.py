@@ -1,0 +1,264 @@
+"""The pjit-able training step: fused projected backward + Q-GaLore update.
+
+Two compiled variants per run:
+  * ``refresh=False`` — steady state: grads for GaLore leaves are emitted
+    low-rank straight out of the backward scan (never materializing the
+    full-rank gradient), then the 8-bit Adam / SR weight update applies.
+  * ``refresh=True``  — subspace-refresh steps: full-rank grads are
+    materialized for GaLore leaves so the masked per-layer SVD can run
+    in-graph (lax.cond inside a layer scan, §3.2).
+
+Gradient accumulation scans over microbatches; with the fused path the
+accumulated payload is the LOW-RANK gradient, which is also what crosses the
+data-parallel axis — the paper-beyond gradient-compression effect.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import QGaLoreConfig, TrainConfig
+from repro.core import qgalore, quant
+from repro.core.qgalore import QGaLoreState
+from repro.models.base import ModelBundle
+from repro.train import stack
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: QGaLoreState
+
+
+def prepare_params(params, qcfg: QGaLoreConfig, param_dtype=jnp.bfloat16):
+    """Quantize eligible weights to INT8 (Q-GaLore) or cast to the param
+    dtype (baselines). Norm scales / small vectors stay float32."""
+    if qcfg.weight_bits == 8:
+        return quant.tree_quantize(
+            params, bits=8, block=qcfg.quant_block, symmetric=True,
+            predicate=lambda p, l: l.ndim >= 2 and l.shape[-1] >= 32)
+    def cast(l):
+        if l.ndim >= 2 and jnp.issubdtype(l.dtype, jnp.floating):
+            return l.astype(param_dtype)
+        return l
+    return jax.tree_util.tree_map(cast, params)
+
+
+def init_state(bundle: ModelBundle, qcfg: QGaLoreConfig, key,
+               param_dtype=jnp.bfloat16) -> TrainState:
+    params = prepare_params(bundle.init_params(key), qcfg, param_dtype)
+    opt = qgalore.init(params, qcfg, jax.random.fold_in(key, 1))
+    return TrainState(params, opt)
+
+
+def abstract_state(bundle: ModelBundle, qcfg: QGaLoreConfig,
+                   param_dtype=jnp.bfloat16) -> TrainState:
+    """eval_shape'd TrainState (no allocation) — for sharding and dry-run."""
+    return jax.eval_shape(
+        lambda k: init_state(bundle, qcfg, k, param_dtype),
+        jax.random.PRNGKey(0))
+
+
+def _specs_for(bundle, qcfg, param_dtype):
+    params_abs = abstract_state(bundle, qcfg, param_dtype).params
+    return qgalore.leaf_specs(params_abs, qcfg)
+
+
+def _global_norm(grads):
+    leaves = [g for g in jax.tree_util.tree_leaves(grads)
+              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype,
+                                                        jnp.floating)]
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in leaves))
+
+
+def _clip(grads, max_norm):
+    if not max_norm:
+        return grads, _global_norm(grads)
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    return jax.tree_util.tree_map(
+        lambda g: (g * scale).astype(g.dtype)
+        if jnp.issubdtype(g.dtype, jnp.floating) else g, grads), norm
+
+
+def _microbatches(batch, accum: int):
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(accum, b // accum, *x.shape[1:])
+    return jax.tree_util.tree_map(split, batch)
+
+
+def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
+                     tcfg: TrainConfig, *, impl: str = "fused",
+                     accum: int = 1, param_dtype=jnp.bfloat16,
+                     mesh=None, dp_compress: bool = False,
+                     moe_ep_axis=None):
+    """Returns ``step(state, batch, lr, rng, refresh_masks) -> (state,
+    metrics)`` with ``refresh`` a static flag baked per variant via
+    functools.partial before jit.
+
+    ``dp_compress`` (beyond-paper): run the gradient phase under a
+    partial-manual ``shard_map`` over the data(+pod) axes — the backward scan
+    projects each layer's cotangent to rank r *before* any cross-replica
+    communication, and ONE explicit ``pmean`` at the end reduces the
+    LOW-RANK payload (≈ min(m,n)/r smaller, once per step instead of once
+    per microbatch). The model axis stays auto (GSPMD). GSPMD alone places
+    the DP all-reduce at the full-rank dW einsum — this is the fix.
+    """
+    specs = _specs_for(bundle, qcfg, param_dtype)
+    seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
+
+    def grad_phase(params, proj_trees, batch):
+        """(loss, metrics, grads) on the (possibly shard-local) batch."""
+        def one_micro(mb):
+            if impl == "fused":
+                return stack.fused_value_and_grad(bundle, params, mb,
+                                                  proj_trees)
+            return stack.simple_value_and_grad(bundle, params, mb)
+
+        if accum > 1:
+            micro = _microbatches(batch, accum)
+
+            def body(acc, mb):
+                (loss, metrics), g = one_micro(mb)
+                acc_g, acc_loss = acc
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), acc_g, g)
+                return (acc_g, acc_loss + loss), metrics
+
+            zero_g = jax.eval_shape(lambda b: one_micro(b)[1],
+                                    jax.tree_util.tree_map(
+                                        lambda x: x[0], micro))
+            zero_g = jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, jnp.float32), zero_g)
+            from repro.models.base import scan_layers
+            (g_sum, loss_sum), metrics = scan_layers(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / accum, g_sum)
+            loss = loss_sum / accum
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+        else:
+            (loss, metrics), grads = one_micro(batch)
+        return loss, metrics, grads
+
+    dp_axes: tuple = ()
+    if dp_compress and mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    # BF16 grad reduction (paper keeps grads BF16) halves the residual
+    # full-rank payloads, but XLA:CPU crashes on bf16 psum under shard_map
+    # ("Invalid binary instruction opcode copy", hlo_instruction.cc) —
+    # enable on TPU backends only. See EXPERIMENTS.md §Perf iteration 4.
+    import os as _os
+    _BF16_REDUCE = _os.environ.get("REPRO_BF16_REDUCE", "0") == "1"
+
+    def _is_expert(path: str) -> bool:
+        return moe_ep_axis is not None and "experts_" in path
+
+    def _manual_specs(tree):
+        """Per-leaf specs over the MANUAL axes: expert leaves ride the
+        shard_map sharded on their E dim (index 1: stacks are (L, E, ...)),
+        everything else enters replicated."""
+        from jax.sharding import PartitionSpec as P
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs = []
+        for path, leaf in flat:
+            pstr = jax.tree_util.keystr(path)
+            nd = getattr(leaf, "ndim", 0)
+            if _is_expert(pstr) and nd >= 3:
+                parts = [None] * nd
+                parts[1] = moe_ep_axis
+                specs.append(P(*parts))
+            else:
+                specs.append(P())
+        return jax.tree_util.tree_unflatten(treedef, specs)
+
+    def grad_phase_dp(params, proj_trees, batch):
+        from jax.sharding import PartitionSpec as P
+        other_axes = tuple(a for a in dp_axes if a != moe_ep_axis)
+
+        def inner(p, pt, b):
+            loss, metrics, grads = grad_phase(p, pt, b)
+            # paper §3.1 keeps gradients in BF16 — reduce in BF16 too
+            # (halves the remaining full-rank payloads, e.g. gemma's 256k-
+            # vocab embedding grad); ONE reduction, on the low-rank payload.
+            # Expert-parallel leaves are OWNED per shard (the all_to_all
+            # already routed every token to the owner) — no reduction over
+            # the EP axis at all.
+            flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
+            out = []
+            for path, g in flat:
+                pstr = jax.tree_util.keystr(path)
+                if _BF16_REDUCE and g.dtype == jnp.float32:
+                    g = g.astype(jnp.bfloat16)
+                if _is_expert(pstr):
+                    if other_axes:
+                        g = jax.lax.pmean(g, other_axes)
+                else:
+                    g = jax.lax.pmean(g, dp_axes)
+                out.append(g)
+            grads = jax.tree_util.tree_unflatten(treedef, out)
+            loss = jax.lax.pmean(loss, dp_axes)
+            metrics = jax.tree_util.tree_map(
+                lambda m: jax.lax.pmean(m.astype(jnp.float32), dp_axes),
+                metrics)
+            return loss, metrics, grads
+
+        batch_specs = jax.tree_util.tree_map(
+            lambda x: P(dp_axes, *([None] * (x.ndim - 1))), batch)
+
+        # grads have the params' tree structure but ONE (virtual) leaf per
+        # QTensor — build their out_specs at that granularity
+        from repro.core import quant as _q
+        gflat, gtreedef = jax.tree_util.tree_flatten_with_path(
+            params, is_leaf=_q.is_qtensor)
+        gspecs = []
+        for path, leaf in gflat:
+            pstr = jax.tree_util.keystr(path)
+            nd = len(leaf.shape)
+            if _is_expert(pstr) and nd >= 3:
+                parts = [None] * nd
+                parts[1] = moe_ep_axis
+                gspecs.append(P(*parts))
+            else:
+                gspecs.append(P())
+        grads_specs = jax.tree_util.tree_unflatten(gtreedef, gspecs)
+
+        return jax.shard_map(
+            inner, mesh=mesh, axis_names=set(dp_axes),
+            in_specs=(_manual_specs(params), _manual_specs(proj_trees),
+                      batch_specs),
+            out_specs=(P(), P(), grads_specs),
+            check_vma=False)(params, proj_trees, batch)
+
+    def step(state: TrainState, batch, lr, rng,
+             refresh_masks: Optional[Dict[int, jax.Array]] = None,
+             refresh: bool = False):
+        params, opt = state
+
+        # projection trees for the fused backward (low-rank emission) —
+        # skipped at refresh steps (full-rank grads needed for SVD).
+        proj_trees: Dict[str, Any] = {}
+        if impl == "fused" and qcfg.enabled and not refresh:
+            for k in seg_keys:
+                if k in opt.proj:
+                    proj_trees[k] = opt.proj[k]
+
+        if dp_axes:
+            loss, metrics, grads = grad_phase_dp(params, proj_trees, batch)
+        else:
+            loss, metrics, grads = grad_phase(params, proj_trees, batch)
+
+        grads, gnorm = _clip(grads, tcfg.grad_clip)
+        new_params, new_opt, opt_metrics = qgalore.apply_updates(
+            params, grads, opt, qcfg, lr=lr, rng=rng,
+            refresh_masks=refresh_masks, refresh=refresh, specs=specs)
+        metrics = {**metrics, "loss": loss, "grad_norm": gnorm,
+                   "lr": jnp.asarray(lr, jnp.float32)}
+        return TrainState(new_params, new_opt), metrics, opt_metrics
+
+    return step, specs

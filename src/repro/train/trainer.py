@@ -1,0 +1,204 @@
+"""The training loop: adaptive subspace control, checkpoint/auto-resume,
+fault tolerance, straggler detection.
+
+Fault-tolerance contract (designed for 1000+-node operation, exercised at
+container scale by tests):
+
+* every step is replayable: data is a pure function of step, RNG keys are
+  folded from (seed, step), the controller state is checkpointed — so a
+  restart from step N reproduces the exact trajectory;
+* ``run()`` retries a failed step after restoring the last checkpoint
+  (``max_failures`` budget) — the single-process analogue of a coordinator
+  restarting a pod after a node failure;
+* a straggler monitor tracks the running median step time and flags steps
+  slower than ``straggler_factor``× the median (on a real cluster the hook
+  feeds preemption/re-scheduling; here it feeds metrics + logs).
+"""
+from __future__ import annotations
+
+import functools
+import json
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import QGaLoreConfig, TrainConfig
+from repro.core import adaptive, optimizers, qgalore
+from repro.data.synthetic import batch_for_bundle
+from repro.models.base import ModelBundle
+from repro.train import checkpoint as ckpt_lib
+from repro.train import step as step_lib
+
+log = logging.getLogger("repro.trainer")
+
+
+@dataclass
+class StragglerMonitor:
+    factor: float = 3.0
+    window: int = 50
+    times: List[float] = field(default_factory=list)
+    events: List[Dict] = field(default_factory=list)
+
+    def observe(self, step: int, dt: float) -> bool:
+        self.times.append(dt)
+        if len(self.times) > self.window:
+            self.times.pop(0)
+        med = float(np.median(self.times))
+        if len(self.times) >= 10 and dt > self.factor * med:
+            self.events.append({"step": step, "dt": dt, "median": med})
+            log.warning("straggler step %d: %.3fs vs median %.3fs",
+                        step, dt, med)
+            return True
+        return False
+
+
+class Trainer:
+    def __init__(self, bundle: ModelBundle, tcfg: TrainConfig,
+                 qcfg: QGaLoreConfig, *, cell=None, impl: str = "fused",
+                 param_dtype=jnp.float32, accum: int = 1,
+                 mesh=None,
+                 fault_hook: Optional[Callable[[int], None]] = None):
+        self.bundle = bundle
+        self.tcfg = tcfg
+        self.qcfg = qcfg
+        self.impl = impl
+        self.param_dtype = param_dtype
+        from repro.config import ShapeCell
+        self.cell = cell or ShapeCell("train", tcfg.seq_len,
+                                      tcfg.global_batch, "train")
+        self.fault_hook = fault_hook          # tests inject failures here
+        self.stragglers = StragglerMonitor()
+
+        raw_step, self.specs = step_lib.build_train_step(
+            bundle, qcfg, tcfg, impl=impl, accum=accum,
+            param_dtype=param_dtype, mesh=mesh,
+            dp_compress=qcfg.compress_dp_grads and mesh is not None)
+        self._step_normal = jax.jit(
+            functools.partial(raw_step, refresh=False, refresh_masks=None))
+        self._step_refresh = jax.jit(
+            functools.partial(raw_step, refresh=True),
+            static_argnames=())
+        self._raw_step = raw_step
+
+        self.controller = adaptive.SubspaceController(self.specs, qcfg)
+        self.mgr = None
+        if tcfg.checkpoint_dir:
+            self.mgr = ckpt_lib.CheckpointManager(
+                tcfg.checkpoint_dir, max_to_keep=tcfg.keep_checkpoints,
+                async_save=tcfg.async_checkpoint)
+
+        self.state = step_lib.init_state(
+            bundle, qcfg, jax.random.PRNGKey(tcfg.seed), param_dtype)
+        self.start_step = 0
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def _abstract_state(self):
+        return step_lib.abstract_state(self.bundle, self.qcfg,
+                                       self.param_dtype)
+
+    def maybe_restore(self) -> int:
+        if self.mgr is None or self.mgr.latest_step() is None:
+            return 0
+        state, meta = self.mgr.restore(None, self._abstract_state())
+        self.state = state
+        if meta.get("controller"):
+            self.controller.from_json(meta["controller"])
+        self.start_step = int(meta["step"]) + 1
+        log.info("restored checkpoint at step %d", meta["step"])
+        return self.start_step
+
+    def save(self, step: int):
+        if self.mgr is None:
+            return
+        self.mgr.save(step, self.state,
+                      {"controller": self.controller.to_json()})
+
+    # ------------------------------------------------------------------
+    def _run_one(self, step: int):
+        if self.fault_hook is not None:
+            self.fault_hook(step)             # may raise (simulated failure)
+        batch = batch_for_bundle(self.bundle, self.cell, step,
+                                 self.tcfg.seed)
+        lr = optimizers.lr_at(step, self.tcfg)
+        rng = jax.random.fold_in(jax.random.PRNGKey(self.tcfg.seed + 17),
+                                 step)
+        masks = self.controller.masks_for_step(step) if self.qcfg.enabled \
+            else {}
+        if masks:
+            # pass masks for EVERY galore leaf (False where not due) so the
+            # refresh variant compiles exactly once
+            jmasks = {
+                i: jnp.asarray(masks[i]) if i in masks
+                else jnp.zeros((s.nbatch,), bool)
+                for i, s in enumerate(self.specs) if s.galore}
+            state, metrics, opt_metrics = self._step_refresh(
+                self.state, batch, lr, rng, refresh_masks=jmasks)
+            sims = {k: np.asarray(v)
+                    for k, v in opt_metrics.get("sims", {}).items()}
+            self.controller.observe(step, masks, sims)
+        else:
+            state, metrics, _ = self._step_normal(self.state, batch, lr, rng)
+        self.state = state
+        return metrics
+
+    def run(self, steps: Optional[int] = None, max_failures: int = 3):
+        steps = steps if steps is not None else self.tcfg.steps
+        failures = 0
+        step = self.start_step
+        while step < steps:
+            t0 = time.monotonic()
+            try:
+                metrics = self._run_one(step)
+            except Exception as e:   # noqa: BLE001 — fault-tolerance path
+                failures += 1
+                log.warning("step %d failed (%s); recovering (%d/%d)",
+                            step, e, failures, max_failures)
+                if failures > max_failures:
+                    raise
+                if self.mgr is not None and self.mgr.latest_step() is not None:
+                    self.maybe_restore()
+                    step = self.start_step
+                continue
+            dt = time.monotonic() - t0
+            self.stragglers.observe(step, dt)
+            row = {k: float(v) for k, v in metrics.items()
+                   if np.ndim(v) == 0}
+            row["step"] = step
+            row["dt"] = dt
+            self.history.append(row)
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                log.info("step %d loss %.4f (%.2fs)", step,
+                         row.get("loss", float("nan")), dt)
+            if (self.tcfg.checkpoint_every
+                    and step % self.tcfg.checkpoint_every == 0
+                    and step > 0):
+                self.save(step)
+            step += 1
+        if self.mgr is not None:
+            self.save(steps - 1)
+            self.mgr.wait()
+        return self.history
+
+    # ------------------------------------------------------------------
+    def eval_loss(self, n_batches: int = 4, offset: int = 10_000) -> float:
+        """Held-out loss on batches the training never sees."""
+        from repro.models import base
+        losses = []
+        fn = jax.jit(lambda p, b: base.loss_fn(self.bundle,
+                                               quantless(p), b)[0])
+        for i in range(n_batches):
+            batch = batch_for_bundle(self.bundle, self.cell, offset + i,
+                                     self.tcfg.seed + 1)
+            losses.append(float(fn(self.state.params, batch)))
+        return float(np.mean(losses))
+
+
+def quantless(params):
+    from repro.core import quant
+    return quant.tree_dequantize(params)

@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import projector, quant
+
+_settings = settings(max_examples=12, deadline=None)
+
+
+class TestQuantInvariants:
+    @given(bits=st.sampled_from([4, 8]),
+           rows=st.integers(1, 8),
+           cols=st.sampled_from([64, 256, 300, 512]),
+           scale=st.floats(1e-3, 1e3))
+    @_settings
+    def test_roundtrip_error_bounded_by_half_scale(self, bits, rows, cols,
+                                                   scale):
+        x = jax.random.normal(jax.random.PRNGKey(rows * cols),
+                              (rows, cols)) * scale
+        qt = quant.quantize_blockwise(x, bits=bits)
+        y = quant.dequantize(qt, jnp.float32)
+        max_scale = float(np.asarray(qt.scale).max())
+        assert float(jnp.abs(y - x).max()) <= 0.5 * max_scale + 1e-6
+
+    @given(rows=st.integers(1, 4), cols=st.sampled_from([256, 512]))
+    @_settings
+    def test_quantize_idempotent_on_grid(self, rows, cols):
+        # values already on the quantization grid survive a round trip
+        x = jax.random.normal(jax.random.PRNGKey(7), (rows, cols))
+        qt = quant.quantize_blockwise(x, bits=8, symmetric=True)
+        y = quant.dequantize(qt, jnp.float32)
+        qt2 = quant.quantize_blockwise(y, bits=8, symmetric=True)
+        y2 = quant.dequantize(qt2, jnp.float32)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                                   atol=1e-5)
+
+    @given(frac=st.floats(0.1, 0.9), n=st.sampled_from([50_000]))
+    @_settings
+    def test_sr_unbiased(self, frac, n):
+        x = jnp.full((n,), frac)
+        r = quant.stochastic_round(x, jax.random.PRNGKey(int(frac * 1e6)))
+        assert abs(float(r.mean()) - frac) < 0.02
+
+
+class TestProjectorInvariants:
+    @given(m=st.sampled_from([32, 64, 128]), n=st.sampled_from([32, 96]),
+           r=st.sampled_from([4, 8, 16]))
+    @_settings
+    def test_projection_linearity(self, m, n, r):
+        """project(aG1 + bG2) == a·project(G1) + b·project(G2) — the property
+        that makes project-before-allreduce gradient compression exact."""
+        key = jax.random.PRNGKey(m * n + r)
+        G1 = jax.random.normal(key, (m, n))
+        G2 = jax.random.normal(jax.random.fold_in(key, 1), (m, n))
+        side = projector.galore_side((m, n))
+        P = projector.compute_subspace(G1 + G2, r, side)
+        a, b = 0.7, -1.3
+        lhs = projector.project(a * G1 + b * G2, P, side)
+        rhs = a * projector.project(G1, P, side) \
+            + b * projector.project(G2, P, side)
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-4, atol=1e-4)
+
+    @given(m=st.sampled_from([64, 128]), r=st.sampled_from([8, 16]))
+    @_settings
+    def test_project_back_project_is_identity_on_subspace(self, m, r):
+        key = jax.random.PRNGKey(m + r)
+        G = jax.random.normal(key, (m, 2 * m))
+        side = projector.galore_side(G.shape)
+        P = projector.compute_subspace(G, r, side)
+        low = projector.project(G, P, side)
+        back = projector.project_back(low, P, side)
+        low2 = projector.project(back, P, side)
+        np.testing.assert_allclose(np.asarray(low), np.asarray(low2),
+                                   rtol=1e-3, atol=1e-4)
+
+    @given(d=st.sampled_from([32, 64]), r=st.sampled_from([4, 8]))
+    @_settings
+    def test_similarity_in_unit_interval(self, d, r):
+        key = jax.random.PRNGKey(d * r)
+        P1 = jnp.linalg.qr(jax.random.normal(key, (d, r)))[0]
+        P2 = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                             (d, r)))[0]
+        s = float(projector.subspace_similarity(P1, P2))
+        assert -1e-5 <= s <= 1.0 + 1e-5
+
+
+class TestDataInvariants:
+    @given(step=st.integers(0, 10_000))
+    @_settings
+    def test_batches_deterministic_by_step(self, step):
+        from repro.data.synthetic import DataConfig, SyntheticLM
+        cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=2, seed=3)
+        a = SyntheticLM(cfg).batch_at(step)
+        b = SyntheticLM(cfg).batch_at(step)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        assert int(a["tokens"].max()) < 512

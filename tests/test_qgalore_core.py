@@ -1,0 +1,281 @@
+"""Tests for projector, adam8bit, qgalore optimizer, adaptive controller."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QGaLoreConfig, replace
+from repro.core import adam8bit, adaptive, projector, qgalore, quant
+from repro.core.adam8bit import AdamHyper
+
+
+class TestProjector:
+    def test_side_convention(self):
+        assert projector.galore_side((512, 128)) == "right"
+        assert projector.galore_side((128, 512)) == "left"
+        assert projector.proj_dim((512, 128)) == 128
+        assert projector.proj_dim((128, 512)) == 128
+
+    @pytest.mark.parametrize("shape,side", [((64, 32), "right"),
+                                            ((32, 64), "left")])
+    def test_svd_recovers_lowrank(self, shape, side):
+        # G exactly rank-4 -> projection with r=4 reconstructs G exactly
+        key = jax.random.PRNGKey(0)
+        a = jax.random.normal(key, (shape[0], 4))
+        b = jax.random.normal(jax.random.fold_in(key, 1), (4, shape[1]))
+        G = a @ b
+        P = projector.compute_subspace(G, 4, side, method="svd")
+        low = projector.project(G, P, side)
+        back = projector.project_back(low, P, side)
+        np.testing.assert_allclose(np.asarray(back), np.asarray(G),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_randomized_close_to_svd(self):
+        key = jax.random.PRNGKey(2)
+        G = jax.random.normal(key, (128, 96))
+        # make a clear spectral gap
+        U, s, Vh = jnp.linalg.svd(G, full_matrices=False)
+        s = s.at[8:].multiply(0.01)
+        G = U @ jnp.diag(s) @ Vh
+        P1 = projector.compute_subspace(G, 8, method="svd")
+        P2 = projector.compute_subspace(G, 8, method="randomized",
+                                        key=jax.random.PRNGKey(3), iters=3)
+        sim = float(projector.subspace_similarity(P1, P2))
+        assert sim > 0.98
+
+    def test_similarity_bounds(self):
+        key = jax.random.PRNGKey(4)
+        P = jnp.linalg.qr(jax.random.normal(key, (64, 8)))[0]
+        assert abs(float(projector.subspace_similarity(P, P)) - 1.0) < 1e-5
+        # orthogonal complement has ~zero overlap
+        Q = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                            (64, 8)))[0]
+        s = float(projector.subspace_similarity(P, Q))
+        assert 0.0 <= s < 0.6
+
+    def test_sign_invariance(self):
+        key = jax.random.PRNGKey(5)
+        P = jnp.linalg.qr(jax.random.normal(key, (64, 8)))[0]
+        assert abs(float(projector.subspace_similarity(P, -P)) - 1.0) < 1e-5
+
+
+class TestAdam8bit:
+    def test_matches_fp32_adam_roughly(self):
+        # quantized-state Adam should track fp32 Adam directionally
+        key = jax.random.PRNGKey(0)
+        g = jax.random.normal(key, (4, 512))
+        h8 = AdamHyper(bits=8)
+        h32 = AdamHyper(bits=32)
+        s8 = adam8bit.init_state(g.shape, h8)
+        s32 = adam8bit.init_state(g.shape, h32)
+        for step in range(1, 6):
+            d8, s8 = adam8bit.update(g, s8, jnp.int32(step), h8)
+            d32, s32 = adam8bit.update(g, s32, jnp.int32(step), h32)
+        cos = float(jnp.sum(d8 * d32) /
+                    (jnp.linalg.norm(d8) * jnp.linalg.norm(d32)))
+        assert cos > 0.99
+
+    def test_first_step_is_sign_of_grad(self):
+        g = jnp.array([[1.0, -2.0, 0.5] + [0.0] * 253])
+        h = AdamHyper(bits=32)
+        s = adam8bit.init_state(g.shape, h)
+        d, _ = adam8bit.update(g, s, jnp.int32(1), h)
+        # m_hat/sqrt(v_hat) == sign(g) for the first step (eps tiny)
+        np.testing.assert_allclose(np.asarray(d[0, :3]),
+                                   np.sign(np.asarray(g[0, :3])), atol=1e-3)
+
+
+def _toy_params(quantized=True):
+    key = jax.random.PRNGKey(0)
+    w1 = jax.random.normal(key, (3, 256, 128)) * 0.02     # stacked layers
+    w2 = jax.random.normal(jax.random.fold_in(key, 1), (128, 256)) * 0.02
+    scale = jnp.ones((128,))
+    emb = jax.random.normal(jax.random.fold_in(key, 2), (512, 128)) * 0.02
+    params = {"blocks": {"w1": w1, "w2": w2, "norm": scale},
+              "embed": emb}
+    if quantized:
+        params = quant.tree_quantize(
+            params, bits=8, symmetric=True,
+            predicate=lambda p, l: l.ndim >= 2)
+    return params
+
+
+class TestQGaLoreOptimizer:
+    def test_leaf_specs(self):
+        cfg = QGaLoreConfig(rank=16, min_dim=64)
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, cfg)
+        by_path = {s.path: s for s in specs}
+        w1 = next(s for p, s in by_path.items() if "w1" in p)
+        assert w1.galore and w1.side == "right" and w1.batch == (3,)
+        emb = next(s for p, s in by_path.items() if "embed" in p)
+        assert not emb.galore  # embeddings excluded by default
+        norm = next(s for p, s in by_path.items() if "norm" in p)
+        assert not norm.galore
+
+    def test_init_shapes(self):
+        cfg = QGaLoreConfig(rank=16, min_dim=64)
+        params = _toy_params()
+        state = qgalore.init(params, cfg)
+        specs = qgalore.leaf_specs(params, cfg)
+        proj_leaves = jax.tree_util.tree_flatten(
+            state.proj, is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
+        for spec, P in zip(specs, proj_leaves):
+            if spec.galore:
+                assert P is not None
+                assert tuple(P.shape) == spec.proj_shape
+            else:
+                assert P is None
+
+    @pytest.mark.parametrize("refresh", [False, True])
+    def test_step_runs_and_descends(self, refresh):
+        cfg = QGaLoreConfig(rank=16, min_dim=64, update_interval=1)
+        params = _toy_params()
+        state = qgalore.init(params, cfg)
+        specs = qgalore.leaf_specs(params, cfg)
+        # synthetic full-rank grads = dequantized params (descend towards 0)
+        grads = quant.tree_dequantize(params, jnp.float32)
+        masks = {i: jnp.ones((s.nbatch,), bool)
+                 for i, s in enumerate(specs) if s.galore} if refresh else None
+        step = functools.partial(qgalore.apply_updates, cfg=cfg, specs=specs,
+                                 refresh=refresh)
+        new_params, new_state, metrics = jax.jit(step)(
+            params, grads, state, lr=1e-2, rng=jax.random.PRNGKey(7),
+            refresh_masks=masks)
+        assert int(new_state.count) == 1
+        # params changed and are finite
+        before = quant.tree_dequantize(params, jnp.float32)
+        after = quant.tree_dequantize(new_params, jnp.float32)
+        diffs = jax.tree_util.tree_map(
+            lambda a, b: float(jnp.abs(a - b).max()), before, after)
+        assert max(jax.tree_util.tree_leaves(diffs)) > 0
+        for leaf in jax.tree_util.tree_leaves(after):
+            assert np.isfinite(np.asarray(leaf)).all()
+        if refresh:
+            assert metrics["sims"]  # similarities reported
+
+    def test_lowrank_grads_accepted(self):
+        """Fused path: grads already projected."""
+        cfg = QGaLoreConfig(rank=16, min_dim=64)
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, cfg)
+        state = qgalore.init(params, cfg)
+        grads = []
+        flat, treedef = jax.tree_util.tree_flatten(params,
+                                                   is_leaf=quant.is_qtensor)
+        for leaf, spec in zip(flat, specs):
+            if spec.galore:
+                grads.append(jnp.ones(spec.low_shape, jnp.float32))
+            else:
+                grads.append(jnp.ones(spec.shape, jnp.float32))
+        grads = jax.tree_util.tree_unflatten(treedef, grads)
+        new_params, _, _ = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=cfg, specs=specs, refresh=False))(
+            params, grads, state, lr=1e-3, rng=jax.random.PRNGKey(0))
+        for leaf in jax.tree_util.tree_leaves(
+                quant.tree_dequantize(new_params)):
+            assert np.isfinite(np.asarray(leaf)).all()
+
+    def test_partial_refresh_mask(self):
+        """Only masked layers get a new P."""
+        cfg = QGaLoreConfig(rank=8, min_dim=64, proj_bits=16)
+        key = jax.random.PRNGKey(0)
+        params = {"w": jax.random.normal(key, (4, 128, 96)) * 0.02}
+        specs = qgalore.leaf_specs(params, cfg)
+        state = qgalore.init(params, cfg)
+        grads = {"w": jax.random.normal(jax.random.fold_in(key, 9),
+                                        (4, 128, 96))}
+        mask = jnp.array([True, False, True, False])
+        new_params, new_state, metrics = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=cfg, specs=specs, refresh=True))(
+            params, grads, state, lr=0.0, rng=key,
+            refresh_masks={0: mask})
+        P_old = state.proj["w"]
+        P_new = new_state.proj["w"]
+        changed = np.asarray(jnp.any(P_old != P_new, axis=(1, 2)))
+        np.testing.assert_array_equal(changed, np.asarray(mask))
+        sims = metrics["sims"][specs[0].path]
+        assert float(sims[1]) == -1.0 and float(sims[0]) >= 0.0
+
+    def test_memory_report_qgalore_smaller(self):
+        cfg_q = QGaLoreConfig(rank=16, min_dim=64)
+        params_q = _toy_params(quantized=True)
+        params_f = _toy_params(quantized=False)
+        from repro.core.optimizers import preset
+        rep_q = qgalore.memory_report(params_q, preset("qgalore", cfg_q))
+        rep_f = qgalore.memory_report(params_f, preset("full", cfg_q))
+        assert rep_q["total_gb"] < 0.5 * rep_f["total_gb"]
+
+
+class TestAdaptiveController:
+    def _setup(self, cfg):
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, cfg)
+        return specs, adaptive.SubspaceController(specs, cfg)
+
+    def test_initial_refresh_at_step0(self):
+        cfg = QGaLoreConfig(update_interval=10)
+        specs, ctrl = self._setup(cfg)
+        masks = ctrl.masks_for_step(0)
+        assert masks  # everything due at step 0
+        for i, m in masks.items():
+            assert m.all()
+
+    def test_interval_doubles_on_high_similarity(self):
+        cfg = QGaLoreConfig(update_interval=10, adaptive=True,
+                            cos_threshold=0.4, adaptive_k=2)
+        specs, ctrl = self._setup(cfg)
+        gidx = next(i for i, s in enumerate(specs) if s.galore)
+        path = specs[gidx].path
+        step = 0
+        for _ in range(4):
+            masks = ctrl.masks_for_step(step)
+            sims = {p: np.full((specs[i].nbatch,), 0.9)
+                    for i, p in [(i, specs[i].path) for i in masks]}
+            ctrl.observe(step, masks, sims)
+            step += 10
+        intervals = ctrl.interval_summary()[path]
+        assert all(iv > cfg.update_interval for iv in intervals)
+
+    def test_interval_stays_on_low_similarity(self):
+        cfg = QGaLoreConfig(update_interval=10, adaptive=True,
+                            cos_threshold=0.4, adaptive_k=2)
+        specs, ctrl = self._setup(cfg)
+        step = 0
+        for _ in range(4):
+            masks = ctrl.masks_for_step(step)
+            sims = {specs[i].path: np.full((specs[i].nbatch,), 0.1)
+                    for i in masks}
+            ctrl.observe(step, masks, sims)
+            step += 10
+        for ivs in ctrl.interval_summary().values():
+            assert all(iv == cfg.update_interval for iv in ivs)
+
+    def test_svd_savings_accounting(self):
+        cfg = QGaLoreConfig(update_interval=5, adaptive=True,
+                            cos_threshold=0.4, adaptive_k=1)
+        specs, ctrl = self._setup(cfg)
+        for step in range(100):
+            masks = ctrl.masks_for_step(step)
+            if masks:
+                sims = {specs[i].path: np.full((specs[i].nbatch,), 0.95)
+                        for i in masks}
+                ctrl.observe(step, masks, sims)
+        used = ctrl.total_svd_count()
+        base = ctrl.baseline_svd_count(100)
+        assert used < 0.5 * base  # >50% SVD savings under stable subspaces
+
+    def test_json_roundtrip(self):
+        cfg = QGaLoreConfig(update_interval=10)
+        specs, ctrl = self._setup(cfg)
+        masks = ctrl.masks_for_step(0)
+        sims = {specs[i].path: np.full((specs[i].nbatch,), 0.9)
+                for i in masks}
+        ctrl.observe(0, masks, sims)
+        blob = ctrl.to_json()
+        ctrl2 = adaptive.SubspaceController(specs, cfg)
+        ctrl2.from_json(blob)
+        assert ctrl2.total_svd_count() == ctrl.total_svd_count()
+        assert ctrl2.interval_summary() == ctrl.interval_summary()

@@ -1,0 +1,124 @@
+"""End-to-end trainer tests: learning, checkpoint/restore determinism,
+fault recovery, straggler accounting, adaptive subspace behavior."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QGaLoreConfig, ShapeCell, TrainConfig, replace
+from repro.core.optimizers import preset
+from repro.models import model_zoo
+from repro.train.trainer import Trainer
+
+CELL = ShapeCell("tiny", seq_len=32, global_batch=4, kind="train")
+
+
+def make_trainer(tmp_path=None, optimizer="qgalore", steps=12, impl="fused",
+                 fault_hook=None, ckpt_every=0, seed=0, lr=1e-2):
+    bundle = model_zoo.build_arch("llama-60m", smoke=True, dtype=jnp.float32)
+    qcfg = preset(optimizer, QGaLoreConfig(
+        rank=8, min_dim=32, update_interval=4, adaptive_k=1,
+        cos_threshold=0.3))
+    tcfg = TrainConfig(
+        seed=seed, global_batch=4, seq_len=32, steps=steps,
+        learning_rate=lr, warmup_steps=2, grad_clip=1.0,
+        checkpoint_dir=str(tmp_path) if tmp_path else "",
+        checkpoint_every=ckpt_every, log_every=0,
+        async_checkpoint=False)
+    return Trainer(bundle, tcfg, qcfg, cell=CELL, impl=impl,
+                   param_dtype=jnp.float32, fault_hook=fault_hook)
+
+
+class TestLearning:
+    def test_loss_decreases_qgalore(self):
+        tr = make_trainer(steps=55)
+        hist = tr.run()
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        assert last < first - 0.15, (first, last)
+
+    def test_loss_decreases_full_baseline(self):
+        tr = make_trainer(steps=30, optimizer="full", lr=3e-3)
+        hist = tr.run()
+        first = np.mean([h["loss"] for h in hist[:5]])
+        last = np.mean([h["loss"] for h in hist[-5:]])
+        assert last < first - 0.1
+
+    def test_qgalore_tracks_full_adam(self):
+        """Paper Table 1 claim at micro scale: Q-GaLore stays in the same
+        loss regime as Full Adam (GaLore's α=0.25 slows the very early
+        trajectory; parity at convergence is shown in benchmarks)."""
+        losses = {}
+        for opt in ("full", "qgalore"):
+            tr = make_trainer(steps=55, optimizer=opt)
+            hist = tr.run()
+            losses[opt] = np.mean([h["loss"] for h in hist[-5:]])
+        assert losses["qgalore"] < losses["full"] + 0.8, losses
+
+    def test_svd_calls_saved_by_adaptive(self):
+        tr = make_trainer(steps=30)
+        tr.run()
+        used = tr.controller.total_svd_count()
+        base = tr.controller.baseline_svd_count(30)
+        assert 0 < used <= base
+
+
+class TestCheckpointRestore:
+    def test_resume_reproduces_trajectory(self, tmp_path):
+        # full run
+        tr_a = make_trainer(tmp_path=tmp_path / "a", steps=12, ckpt_every=5)
+        hist_a = tr_a.run()
+        # interrupted run: 0..7, then a fresh trainer resumes from ckpt
+        tr_b = make_trainer(tmp_path=tmp_path / "b", steps=12, ckpt_every=5)
+        tr_b.run(steps=8)
+        tr_c = make_trainer(tmp_path=tmp_path / "b", steps=12, ckpt_every=5)
+        resumed_at = tr_c.maybe_restore()
+        assert resumed_at > 0
+        hist_c = tr_c.run()
+        last_a = [h["loss"] for h in hist_a][-3:]
+        last_c = [h["loss"] for h in hist_c][-3:]
+        np.testing.assert_allclose(last_a, last_c, rtol=2e-3, atol=2e-3)
+
+    def test_fault_recovery(self, tmp_path):
+        boom = {"armed": True}
+
+        def fault(step):
+            if step == 9 and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("simulated node failure")
+
+        tr = make_trainer(tmp_path=tmp_path, steps=12, ckpt_every=4,
+                          fault_hook=fault)
+        hist = tr.run()
+        steps_seen = [h["step"] for h in hist]
+        assert 11 in steps_seen          # completed despite the failure
+        assert not boom["armed"]
+
+    def test_fault_budget_exhausted_raises(self, tmp_path):
+        def always_fail(step):
+            raise RuntimeError("permafail")
+
+        tr = make_trainer(tmp_path=tmp_path, steps=4, ckpt_every=2,
+                          fault_hook=always_fail)
+        with pytest.raises(RuntimeError):
+            tr.run(max_failures=2)
+
+
+class TestStraggler:
+    def test_straggler_detection(self):
+        tr = make_trainer(steps=1)
+        for i in range(20):
+            tr.stragglers.observe(i, 0.1)
+        assert tr.stragglers.observe(20, 1.0)     # 10x median
+        assert tr.stragglers.events
+
+
+class TestImplParity:
+    def test_fused_and_simple_same_losses(self):
+        h1 = make_trainer(steps=6, impl="fused", seed=3).run()
+        h2 = make_trainer(steps=6, impl="simple", seed=3).run()
+        l1 = [h["loss"] for h in h1]
+        l2 = [h["loss"] for h in h2]
+        np.testing.assert_allclose(l1, l2, rtol=5e-3, atol=5e-3)
