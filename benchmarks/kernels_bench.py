@@ -1,6 +1,21 @@
 """Kernel microbenchmarks (CPU wall time of the jnp reference paths +
 interpret-mode Pallas correctness cost; real-TPU numbers come from the
-roofline, not this box) and serving throughput."""
+roofline, not this box) and serving throughput.
+
+The fused-update section times the Q-GaLore per-step weight update both
+ways:
+
+* unfused-interpret — the three-op hot path as three separate Pallas
+  calls in interpret mode (INT4 projection matmul, jnp Adam, SR requant),
+  which is what the per-leaf loop used to run on CPU containers;
+* unfused-same-backend — the same three-op composition on the
+  dispatch-selected default backend (isolates the fusion benefit from
+  the interpreter overhead);
+* fused   — ``ops.fused_qgalore_update`` on the dispatch-selected default
+  backend (pure-XLA ``ref`` off-TPU, ``pallas-tpu`` on TPU),
+
+and emits both speedup ratios.
+"""
 from __future__ import annotations
 
 import time
@@ -10,9 +25,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit
-from repro.core import quant
+from repro.core import projector, quant
 from repro.core.quant import quantize_blockwise
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 
 
 def _time(fn, *args, iters=5):
@@ -56,6 +71,72 @@ def main():
     jax.block_until_ready(out)
     emit("kernels/int8_pallas_interpret", (time.monotonic() - t0) * 1e6,
          "M=128;K=256;N=512;mode=interpret")
+
+    fused_update_bench(key)
+
+
+def fused_update_bench(key, m=2048, n=1024, r=128, iters=3):
+    """Fused vs unfused Q-GaLore step update (acceptance: >= 1.5x).
+
+    Both variants are jitted end-to-end over a llama-130m-sized layer so
+    the comparison measures the update pipeline, not Python dispatch.
+    """
+    W = jax.random.normal(jax.random.fold_in(key, 10), (m, n)) * 0.02
+    qt = quantize_blockwise(W, bits=8, symmetric=True)
+    P = jnp.linalg.qr(
+        jax.random.normal(jax.random.fold_in(key, 11), (n, r)))[0]
+    qp = projector.quantize_projection(P, 4, 256)
+    grad = jax.random.normal(jax.random.fold_in(key, 12), (m, n))
+    m32 = jnp.zeros((m, r))
+    v32 = jnp.zeros((m, r))
+    b1, b2, eps, gscale, lr = 0.9, 0.999, 1e-8, 0.25, 1e-2
+    rng = jax.random.PRNGKey(5)
+
+    backend = dispatch.default_backend("fused_qgalore_update")
+
+    def make_unfused(op_backend):
+        @jax.jit
+        def unfused(grad, m32, v32, rng):
+            # three separate op calls, as the per-leaf loop ran them:
+            # project, Adam (jnp), SR-requant
+            low = ops.int4_project(grad, qp, backend=op_backend)
+            m_new = b1 * m32 + (1 - b1) * low
+            v_new = b2 * v32 + (1 - b2) * low * low
+            dirn = (m_new / (1 - b1)) / (jnp.sqrt(v_new / (1 - b2)) + eps)
+            upd = gscale * projector.project_back(
+                dirn, projector.maybe_dequantize(qp), "right")
+            new_qt = ops.sr_requant_update(qt, -lr * upd, rng,
+                                           backend=op_backend)
+            return new_qt.q, m_new, v_new
+        return unfused
+
+    @jax.jit
+    def fused(grad, m32, v32, rng):
+        low = projector.project(
+            grad, projector.maybe_dequantize(qp), "right")
+        new_qt, m_new, v_new = ops.fused_qgalore_update(
+            qt, low, m32, v32, qp, jnp.float32(1), lr, rng, side="right",
+            gscale=gscale, backend=backend)
+        return new_qt.q, m_new, v_new
+
+    us_interp = _time(make_unfused("pallas-interpret"), grad, m32, v32,
+                      rng, iters=iters)
+    us_same = _time(make_unfused(backend), grad, m32, v32, rng,
+                    iters=iters)
+    us_fused = _time(fused, grad, m32, v32, rng, iters=iters)
+    shape = f"M={m};N={n};r={r}"
+    emit("kernels/step_update_unfused_interpret", us_interp,
+         shape + ";ops=3;mode=interpret")
+    emit("kernels/step_update_unfused", us_same,
+         shape + f";ops=3;backend={backend}")
+    emit("kernels/step_update_fused", us_fused,
+         shape + f";backend={backend}")
+    # vs the old per-leaf loop on CPU containers (interpret-mode ops)
+    emit("kernels/step_update_fused_speedup", us_interp / us_fused,
+         shape + ";unit=x;baseline=interpret")
+    # vs the same backend unfused — the fusion benefit itself
+    emit("kernels/step_update_fusion_speedup", us_same / us_fused,
+         shape + ";unit=x;baseline=same-backend")
 
 
 if __name__ == "__main__":

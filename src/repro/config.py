@@ -141,6 +141,15 @@ class QGaLoreConfig:
     # subspace method: "svd" (paper-faithful) | "randomized" (TPU-fast)
     subspace_method: str = "svd"
     subspace_iters: int = 2         # power iterations for randomized method
+    # fused update path: run Adam + INT4 back-projection + SR requant as
+    # ONE kernel per weight (repro.kernels.fused_update) when a leaf is
+    # eligible (INT8 symmetric weight, INT4 projection, SR on). Falls back
+    # to the unfused composition per-leaf otherwise.
+    fused_update: bool = True
+    # stack same-shaped leaves and scan ONE update program over them
+    # instead of unrolling a Python loop per leaf (smaller HLO, faster
+    # compiles, better kernel reuse)
+    batch_leaves: bool = True
     # which params get low-rank treatment
     min_dim: int = 128              # both dims must be >= this
     galore_embeddings: bool = False

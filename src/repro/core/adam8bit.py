@@ -66,6 +66,34 @@ def _quant_v(v: jax.Array, hyper: AdamHyper):
                                     symmetric=False)
 
 
+def moments_fp32(state: Adam8bitState) -> tuple[jax.Array, jax.Array]:
+    """Dequantize the moment pair to f32 (``v`` leaves the sqrt domain).
+
+    Used by the fused update path: the kernel does its Adam math on f32
+    moments in VMEM; this is the HBM→f32 load it starts from. The traffic
+    is low-rank (``max(m,n) * r`` per moment), a ``r/min(m,n)`` fraction
+    of the weight stream.
+    """
+    is_q = isinstance(state.v, QTensor)
+    m = _deq(state.m)
+    v = _deq_v(state.v) if is_q else _deq(state.v)
+    return m, v
+
+
+def pack_moments(m: jax.Array, v: jax.Array,
+                 hyper: AdamHyper) -> Adam8bitState:
+    """Re-quantize updated f32 moments into the stored representation
+    (INT8 block-wise for ``bits == 8``, ``v`` back into sqrt domain)."""
+    if hyper.bits == 32:
+        return Adam8bitState(m, v)
+    return Adam8bitState(
+        quant.quantize_blockwise(m, bits=8,
+                                 block=_eff_block(m.shape, hyper),
+                                 symmetric=True),
+        _quant_v(v, hyper),
+    )
+
+
 def update(
     grad: jax.Array,
     state: Adam8bitState,
@@ -78,25 +106,14 @@ def update(
     applies learning rate / GaLore scale) and the new state.
     """
     g = grad.astype(jnp.float32)
-    is_q = isinstance(state.v, QTensor)
-    m = hyper.beta1 * _deq(state.m) + (1.0 - hyper.beta1) * g
-    v_prev = _deq_v(state.v) if is_q else _deq(state.v)
+    m_prev, v_prev = moments_fp32(state)
+    m = hyper.beta1 * m_prev + (1.0 - hyper.beta1) * g
     v = hyper.beta2 * v_prev + (1.0 - hyper.beta2) * (g * g)
     c = count.astype(jnp.float32)
     m_hat = m / (1.0 - hyper.beta1 ** c)
     v_hat = v / (1.0 - hyper.beta2 ** c)
     direction = m_hat / (jnp.sqrt(v_hat) + hyper.eps)
-
-    if hyper.bits == 32:
-        new_state = Adam8bitState(m, v)
-    else:
-        new_state = Adam8bitState(
-            quant.quantize_blockwise(m, bits=8,
-                                     block=_eff_block(m.shape, hyper),
-                                     symmetric=True),
-            _quant_v(v, hyper),
-        )
-    return direction.astype(grad.dtype), new_state
+    return direction.astype(grad.dtype), pack_moments(m, v, hyper)
 
 
 def state_nbytes(state: Adam8bitState) -> int:

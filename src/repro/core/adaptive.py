@@ -9,6 +9,24 @@ original cadence.
 
 The controller lives outside jit (it manipulates Python ints from per-layer
 similarity scalars returned by the train step) and is checkpointed as JSON.
+
+Interaction with the compiled step (see ``train/step.py`` /
+``core/qgalore.py``):
+
+1. Before each step the trainer asks :meth:`SubspaceController.masks_for_step`
+   whether any projection is due; a non-empty answer selects the
+   ``refresh=True`` jit variant with the per-layer boolean masks.
+2. The refresh step recomputes P only for masked layers (``lax.cond``
+   inside the layer scan — unmasked layers skip the SVD entirely) and
+   returns the rotation/sign-invariant subspace similarity
+   ``‖P_oldᵀ P_new‖_F² / r`` per refreshed layer.
+3. :meth:`SubspaceController.observe` folds those similarities back into
+   the per-layer intervals.
+
+Memory footprint: the controller holds a few Python ints and a short
+similarity history per projection matrix — none of it lives on device, so
+the adaptive policy costs zero HBM on top of the paper Table 2 state
+budget (INT8 weights, INT4 projections, low-rank INT8 Adam moments).
 """
 from __future__ import annotations
 

@@ -18,6 +18,34 @@ Gradients arriving at :func:`apply_updates` may be **full-rank** (simple
 path) or **already low-rank** (fused projected-backward path, see
 ``repro.train.stack``); refresh steps always require full-rank grads for the
 leaves being refreshed.
+
+Hot-path execution (``apply_updates``)
+--------------------------------------
+Steady-state (non-refresh) steps run through two optimizations, both on by
+default and gated by ``QGaLoreConfig``:
+
+* ``cfg.fused_update`` — eligible leaves (symmetric INT8 weight, INT4
+  projection, stochastic rounding on) update through ONE fused kernel
+  (:func:`repro.kernels.ops.fused_qgalore_update`): low-rank Adam →
+  INT4 back-projection → SR INT8 requant, with the full-rank f32 update
+  living only in kernel VMEM — it is never written to HBM. Backend
+  selection (pallas-tpu / pallas-interpret / pure-XLA ref) comes from
+  :mod:`repro.kernels.dispatch`. Given the same RNG key the fused path
+  draws the same SR randoms as the unfused composition and matches it to
+  within one INT8 quantum (fp reassociation at floor boundaries).
+* ``cfg.batch_leaves`` — leaves whose update program is identical
+  (same virtual shape, side, rank, quantization layout) are stacked and
+  driven by one ``lax.scan`` instead of a per-leaf Python loop, shrinking
+  the traced HLO and reusing one compiled kernel across leaves. RNG
+  folding is per original leaf index, so grouping does not change
+  numerics.
+
+Memory model (paper Table 2): per GaLore leaf ``(m, n)`` the persistent
+state is the INT8 weight (codes + f32 block scales), the INT4 projection
+``(min(m,n), r)`` (nibbles + scale/zero), and the two low-rank INT8 Adam
+moments ``(max(m,n), r)``; on the fused path the transient full-rank f32
+update stays in VMEM and the only full-rank f32 stream left in HBM is the
+SR randoms input (see ``repro.kernels.ops``).
 """
 from __future__ import annotations
 
@@ -33,6 +61,7 @@ from repro.config import QGaLoreConfig
 from repro.core import adam8bit, projector, quant
 from repro.core.adam8bit import Adam8bitState, AdamHyper
 from repro.core.quant import QTensor
+from repro.kernels import ops as kernel_ops
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +237,75 @@ def _grad_is_lowrank(grad, spec: LeafSpec) -> bool:
         and tuple(grad.shape) != spec.shape
 
 
+# ---------------------------------------------------------------------------
+# Fused update path (one kernel: Adam + back-projection + SR requant)
+# ---------------------------------------------------------------------------
+
+def _fused_eligible(param, P, spec: LeafSpec, cfg: QGaLoreConfig) -> bool:
+    """The fused kernel covers the paper-default configuration: symmetric
+    INT8 weights with stochastic rounding and an INT4 projection. Anything
+    else (fp weights, fp projections, round-to-nearest) takes the unfused
+    composition."""
+    return (
+        cfg.fused_update
+        and spec.galore
+        and cfg.stochastic_rounding
+        and quant.is_qtensor(param) and param.bits == 8 and param.symmetric
+        and quant.is_qtensor(P) and P.bits == 4
+    )
+
+
+def _update_leaf_fused(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
+                       cfg: QGaLoreConfig, lr, count, key):
+    """Steady-state update of one GaLore leaf through the fused kernel.
+
+    Draws the same SR randoms as the unfused path (same per-layer key
+    folding), so results agree to within one INT8 quantum. Stacked leaves
+    scan the kernel over the layer axis so the full-rank transients exist
+    for one layer at a time.
+    """
+    hyper = _hyper(cfg)
+    if _grad_is_lowrank(grad, spec):
+        low = grad.astype(jnp.float32)
+    else:
+        P_deq = projector.maybe_dequantize(P, jnp.float32)
+        low = projector.project(grad.astype(jnp.float32), P_deq, spec.side)
+    m32, v32 = adam8bit.moments_fp32(inner)
+
+    fused = functools.partial(
+        kernel_ops.fused_qgalore_update, side=spec.side, gscale=cfg.scale,
+        beta1=cfg.beta1, beta2=cfg.beta2, eps=cfg.eps,
+        weight_decay=cfg.weight_decay)
+
+    if spec.batch:
+        b = spec.nbatch
+        nlead = len(spec.batch)
+        flat = lambda t: jax.tree_util.tree_map(
+            lambda x: x.reshape((b,) + x.shape[nlead:]), t)
+        param_f, P_f = flat(param), flat(P)
+        low_f = low.reshape((b,) + low.shape[nlead:])
+        m_f = m32.reshape(low_f.shape)
+        v_f = v32.reshape(low_f.shape)
+
+        def body(carry, inp):
+            p_l, l_l, m_l, v_l, P_l, i = inp
+            out = fused(p_l, l_l, m_l, v_l, P_l, count, lr,
+                        jax.random.fold_in(key, i))
+            return carry, out
+
+        _, (newp_f, mn_f, vn_f) = jax.lax.scan(
+            body, 0, (param_f, low_f, m_f, v_f, P_f, jnp.arange(b)))
+        new_param = jax.tree_util.tree_map(
+            lambda x, ref: x.reshape(ref.shape), newp_f, param)
+        m_new = mn_f.reshape(m32.shape)
+        v_new = vn_f.reshape(v32.shape)
+    else:
+        new_param, m_new, v_new = fused(param, low, m32, v32, P, count, lr,
+                                        key)
+    new_inner = adam8bit.pack_moments(m_new, v_new, hyper)
+    return new_param, new_inner, P, None
+
+
 def _apply_weight_update(param, direction_or_upd, P_deq, spec: LeafSpec,
                          cfg: QGaLoreConfig, lr, key):
     """Back-project (if galore) and apply the update to one (sub-)leaf.
@@ -242,6 +340,9 @@ def _apply_weight_update(param, direction_or_upd, P_deq, spec: LeafSpec,
 def _update_leaf(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
                  cfg: QGaLoreConfig, lr, count, mask, key, refresh: bool):
     """Returns (new_param, new_inner, new_P, sim_array_or_None)."""
+    if not refresh and _fused_eligible(param, P, spec, cfg):
+        return _update_leaf_fused(param, grad, inner, P, spec, cfg, lr,
+                                  count, key)
     hyper = _hyper(cfg)
     sims = None
     new_P = P
@@ -292,6 +393,74 @@ def _update_leaf(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
     return new_param, new_inner, new_P, sims
 
 
+def _leaf_sig(x):
+    """Structural signature of a leaf — two leaves with equal signatures
+    run the identical update program and can be stacked + scanned."""
+    if x is None:
+        return None
+    if isinstance(x, Adam8bitState):
+        return ("adam", _leaf_sig(x.m), _leaf_sig(x.v))
+    if quant.is_qtensor(x):
+        return ("qt", tuple(x.q.shape), str(x.q.dtype),
+                tuple(x.scale.shape), x.zero is not None, x.bits, x.block,
+                x.orig_last, x.dtype)
+    return ("arr", tuple(x.shape), str(x.dtype))
+
+
+def _group_sig(param, grad, inner, P, spec: LeafSpec):
+    return (spec.shape, spec.galore, spec.side, spec.rank, spec.batch,
+            _leaf_sig(param), _leaf_sig(grad), _leaf_sig(inner),
+            _leaf_sig(P))
+
+
+def _stack_leaves(leaves):
+    """Stack a list of same-structure pytrees (QTensor / Adam8bitState /
+    array) along a new axis 0, leaf-wise."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *leaves)
+
+
+def _unstack_leaf(stacked, j):
+    return jax.tree_util.tree_map(lambda x: x[j], stacked)
+
+
+def _run_group(idxs, p_flat, g_flat, i_flat, pr_flat, spec: LeafSpec,
+               cfg: QGaLoreConfig, lr, count, rng):
+    """Update a group of same-signature leaves with one scanned program.
+
+    Per-leaf RNG keys are folded from the ORIGINAL leaf indices, so the
+    result is bit-identical to running the leaves through the Python loop.
+    Returns {idx: (new_param, new_inner, new_P)}.
+    """
+    keys = jnp.stack([jax.random.fold_in(rng, i) for i in idxs])
+    p_s = _stack_leaves([p_flat[i] for i in idxs])
+    g_s = _stack_leaves([g_flat[i] for i in idxs])
+    i_s = _stack_leaves([i_flat[i] for i in idxs])
+    has_proj = pr_flat[idxs[0]] is not None
+    pr_s = _stack_leaves([pr_flat[i] for i in idxs]) if has_proj else None
+
+    def body(carry, inp):
+        if has_proj:
+            p, g, inn, P_, k = inp
+        else:
+            p, g, inn, k = inp
+            P_ = None
+        np_, ni_, _, _ = _update_leaf(p, g, inn, P_, spec, cfg, lr,
+                                      count, None, k, False)
+        # P is never refreshed inside a group (refresh leaves run singly)
+        # — don't thread it through the scan outputs, which would copy
+        # every grouped projection each step.
+        return carry, (np_, ni_)
+
+    xs = (p_s, g_s, i_s, pr_s, keys) if has_proj else (p_s, g_s, i_s, keys)
+    _, outs = jax.lax.scan(body, 0, xs)
+    results = {}
+    for j, idx in enumerate(idxs):
+        np_ = _unstack_leaf(outs[0], j)
+        ni_ = _unstack_leaf(outs[1], j)
+        results[idx] = (np_, ni_, pr_flat[idx])
+    return results
+
+
 def apply_updates(
     params,
     grads,
@@ -309,6 +478,14 @@ def apply_updates(
     ``refresh_masks``: {leaf_index: (nbatch,) bool} for galore leaves due for
     subspace refresh (only consulted when ``refresh=True``; unmasked galore
     leaves keep their P).
+
+    Leaves are not updated one-by-one: with ``cfg.batch_leaves`` (default)
+    all leaves sharing an update signature (shape / side / rank /
+    quantization layout) are stacked and driven by one ``lax.scan``, and
+    with ``cfg.fused_update`` (default) each eligible leaf's Adam +
+    back-projection + SR requant runs as one fused kernel. Neither changes
+    the numbers — per-leaf RNG folding is preserved.
+
     Returns (new_params, new_state, metrics).
     """
     specs = specs or leaf_specs(params, cfg)
@@ -321,11 +498,35 @@ def apply_updates(
         state.proj, is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
     count = state.count + 1
 
-    new_p, new_i, new_pr = [], [], []
     sims_out: Dict[str, jax.Array] = {}
     refresh_masks = refresh_masks or {}
-    for idx, (param, grad, inner, P, spec) in enumerate(
-            zip(p_flat, g_flat, i_flat, pr_flat, specs)):
+    n_leaves = len(p_flat)
+
+    # Partition: leaves due for refresh (or with grouping off) run singly;
+    # the rest are grouped by their update signature.
+    groups: Dict[Any, List[int]] = {}
+    singles: List[int] = []
+    for idx, spec in enumerate(specs):
+        do_refresh = refresh and spec.galore and idx in refresh_masks
+        if do_refresh or not cfg.batch_leaves:
+            singles.append(idx)
+        else:
+            sig = _group_sig(p_flat[idx], g_flat[idx], i_flat[idx],
+                             pr_flat[idx], spec)
+            groups.setdefault(sig, []).append(idx)
+
+    results: Dict[int, tuple] = {}
+    for sig, idxs in groups.items():
+        if len(idxs) == 1:
+            singles.append(idxs[0])
+            continue
+        results.update(_run_group(idxs, p_flat, g_flat, i_flat, pr_flat,
+                                  specs[idxs[0]], cfg, lr, count, rng))
+
+    for idx in singles:
+        param, grad, inner, P, spec = (p_flat[idx], g_flat[idx],
+                                       i_flat[idx], pr_flat[idx],
+                                       specs[idx])
         key = jax.random.fold_in(rng, idx)
         do_refresh = refresh and spec.galore and idx in refresh_masks
         mask = refresh_masks.get(idx)
@@ -334,11 +535,13 @@ def apply_updates(
         np_, ni_, npr_, sims = _update_leaf(
             param, grad, inner, P, spec, cfg, lr, count, mask, key,
             do_refresh)
-        new_p.append(np_)
-        new_i.append(ni_)
-        new_pr.append(npr_)
+        results[idx] = (np_, ni_, npr_)
         if sims is not None:
             sims_out[spec.path] = sims
+
+    new_p = [results[i][0] for i in range(n_leaves)]
+    new_i = [results[i][1] for i in range(n_leaves)]
+    new_pr = [results[i][2] for i in range(n_leaves)]
 
     new_params = jax.tree_util.tree_unflatten(treedef, new_p)
     new_state = QGaLoreState(

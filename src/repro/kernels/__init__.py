@@ -1,3 +1,14 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the Q-GaLore hot paths, plus backend dispatch.
+
+Modules:
+  * ``ops``       — public wrappers (padding, QTensor plumbing, backend
+                    selection). Import this, not the kernels directly.
+  * ``dispatch``  — backend registry (pallas-tpu / pallas-interpret / ref),
+                    platform detection, block-size autotune table.
+  * ``ref``       — pure-jnp oracles for every kernel (allclose targets
+                    and the fast XLA backend off-TPU).
+  * ``fused_update``, ``int4_matmul``, ``int8_matmul``, ``sr_requant``,
+    ``blockwise_quant``, ``flash_attention`` — the Pallas kernels.
+
+See docs/kernels.md for each kernel's contract and block-size knobs.
+"""

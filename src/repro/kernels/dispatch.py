@@ -1,0 +1,206 @@
+"""Kernel backend registry, platform detection, and block-size autotuning.
+
+Every compute op in :mod:`repro.kernels` has up to three interchangeable
+implementations:
+
+``pallas-tpu``
+    The Pallas kernel compiled for the real accelerator
+    (``interpret=False``). Fastest path; only valid when
+    ``jax.default_backend() == "tpu"``.
+``pallas-interpret``
+    The same Pallas kernel run through the Pallas interpreter. Bit-faithful
+    to the TPU kernel's semantics (used as the correctness harness on CPU
+    containers) but orders of magnitude slower than XLA.
+``ref``
+    The pure-``jnp`` oracle from :mod:`repro.kernels.ref`, jitted by XLA.
+    Mathematically identical contract; the fast default off-TPU.
+
+Selection order for :func:`default_backend`:
+
+1. ``REPRO_KERNEL_BACKEND`` env var (one of the names above) — global
+   override, useful for A/B benchmarks and CI.
+2. ``REPRO_PALLAS_COMPILED=1`` (legacy knob) → ``pallas-tpu``.
+3. Platform detection: TPU → ``pallas-tpu``; anything else → ``ref``.
+
+If the requested backend has no registered implementation for an op,
+:func:`resolve` walks the fallback chain
+``pallas-tpu → pallas-interpret → ref`` so callers never crash on a
+partially-implemented op.
+
+Block-size autotune table
+-------------------------
+:func:`tuned_blocks` returns the block-size kwargs for a (op, shape, dtype,
+backend) query. Shapes are bucketed to the next power of two so the table
+stays small; exact entries win over bucketed entries, which win over the
+per-op defaults. The table is seeded with hand-tuned values for the fused
+update kernel and the matmuls (VMEM-fitting tiles, MXU-aligned); it is a
+plain dict so future PRs can extend it from real autotune sweeps.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+KNOWN_BACKENDS = ("pallas-tpu", "pallas-interpret", "ref")
+
+# op name -> backend name -> callable
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+# Fallback order when the preferred backend is not registered for an op.
+_FALLBACK = {
+    "pallas-tpu": ("pallas-tpu", "pallas-interpret", "ref"),
+    "pallas-interpret": ("pallas-interpret", "ref"),
+    "ref": ("ref", "pallas-interpret"),
+}
+
+
+def register(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of ``op``."""
+    assert backend in KNOWN_BACKENDS, backend
+
+    def deco(fn):
+        _REGISTRY.setdefault(op, {})[backend] = fn
+        return fn
+
+    return deco
+
+
+@functools.lru_cache(maxsize=None)
+def platform() -> str:
+    """The JAX default backend platform ("cpu" | "gpu" | "tpu")."""
+    return jax.default_backend()
+
+
+def default_backend(op: Optional[str] = None) -> str:
+    """Pick the backend for ``op`` (or globally when ``op`` is None)."""
+    env = os.environ.get("REPRO_KERNEL_BACKEND", "")
+    if env:
+        if env not in KNOWN_BACKENDS:
+            raise ValueError(
+                f"REPRO_KERNEL_BACKEND={env!r}; expected one of "
+                f"{KNOWN_BACKENDS}")
+        return env
+    if os.environ.get("REPRO_PALLAS_COMPILED", "0") == "1":
+        return "pallas-tpu"
+    if platform() == "tpu":
+        return "pallas-tpu"
+    return "ref"
+
+
+def available_backends(op: str) -> Tuple[str, ...]:
+    return tuple(_REGISTRY.get(op, {}))
+
+
+def resolve(op: str, backend: Optional[str] = None
+            ) -> Tuple[str, Callable]:
+    """(backend_name, fn) for ``op``, honoring the fallback chain."""
+    want = backend or default_backend(op)
+    if want not in KNOWN_BACKENDS:
+        raise ValueError(
+            f"unknown backend {want!r} for op {op!r}; expected one of "
+            f"{KNOWN_BACKENDS}")
+    impls = _REGISTRY.get(op)
+    if not impls:
+        raise KeyError(f"no implementations registered for op {op!r}")
+    for name in _FALLBACK[want]:
+        if name in impls:
+            return name, impls[name]
+    # last resort: anything registered
+    name = next(iter(impls))
+    return name, impls[name]
+
+
+def dispatch(op: str, *args, backend: Optional[str] = None, **kwargs):
+    """Call the selected implementation of ``op``."""
+    _, fn = resolve(op, backend)
+    return fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Block-size autotune table
+# ---------------------------------------------------------------------------
+
+def _bucket(n: int) -> int:
+    """Round up to the next power of two (shape bucketing key)."""
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+# Per-op defaults (used when no table entry matches). Values are the
+# kwargs forwarded to the Pallas wrapper.
+_DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
+    "int8_matmul": {"bm": 128, "bn": 256, "bk": 512},
+    "int4_matmul": {"bm": 128, "bk": 512},
+    "sr_requant": {"br": 256, "bc": 512},
+    "blockwise_quant": {"br": 256, "bc": 512},
+    "fused_qgalore_update": {"bm": 256, "bn": 512},
+    "flash_attention": {"bq": 128, "bkv": 128},
+}
+
+# (op, backend, bucketed shape, dtype) -> block kwargs. Shape is the
+# bucketed problem shape (op-specific meaning, documented in
+# docs/kernels.md). dtype "" matches any dtype.
+_TABLE: Dict[Tuple[str, str, Tuple[int, ...], str], Dict[str, int]] = {
+    # Fused update: small rows → one row-block avoids grid overhead;
+    # huge rows → taller tiles amortize the resident P dequant.
+    ("fused_qgalore_update", "pallas-tpu", (1024, 1024), ""):
+        {"bm": 256, "bn": 1024},
+    ("fused_qgalore_update", "pallas-tpu", (4096, 4096), ""):
+        {"bm": 512, "bn": 1024},
+    ("fused_qgalore_update", "pallas-interpret", (256, 256), ""):
+        {"bm": 256, "bn": 256},
+    # INT8 matmul: bf16 activations halve VMEM → wider N tiles.
+    ("int8_matmul", "pallas-tpu", (4096, 4096), "bfloat16"):
+        {"bm": 256, "bn": 512, "bk": 512},
+    ("int4_matmul", "pallas-tpu", (4096, 4096), ""):
+        {"bm": 256, "bk": 1024},
+}
+
+
+def fit_block(dim: int, request: int, multiple_of: int = 1) -> int:
+    """Largest tile ≤ ``request`` that divides ``dim`` (and is a multiple
+    of ``multiple_of``), falling back to ``dim`` itself.
+
+    The Pallas kernels floor-divide their grids (``grid = dim // tile``)
+    without asserting divisibility, so a table/tuned tile that does not
+    divide the (padded) problem dimension would silently drop the
+    remainder. Every ``ops`` wrapper clamps its tile kwargs through this
+    before forwarding them.
+
+    Awkward dims (e.g. a prime sequence length) whose only small divisors
+    are degenerate fall back to ``dim`` itself — one tile over that axis,
+    matching the kernels' old ``min(tile, dim)`` clamp — rather than a
+    grid of 1-wide tiles.
+    """
+    request = max(1, min(request, dim))
+    best = 1
+    for d in range(request, 0, -1):
+        if dim % d == 0 and d % multiple_of == 0:
+            best = d
+            break
+    if best * 4 <= request and dim % max(multiple_of, 1) == 0:
+        return dim
+    return best
+
+
+def tuned_blocks(op: str, shape: Tuple[int, ...],
+                 dtype: str = "", backend: Optional[str] = None
+                 ) -> Dict[str, int]:
+    """Block-size kwargs for ``op`` on a problem of ``shape``.
+
+    ``shape`` is the op's 2-D problem footprint (e.g. the weight matrix
+    (M, N) for the fused update). Lookup order: exact (bucketed shape,
+    dtype) → (bucketed shape, any dtype) → per-op defaults.
+    """
+    backend = backend or default_backend(op)
+    bshape = tuple(_bucket(int(d)) for d in shape)
+    for dt in (dtype, ""):
+        hit = _TABLE.get((op, backend, bshape, dt))
+        if hit is not None:
+            return dict(hit)
+    return dict(_DEFAULT_BLOCKS.get(op, {}))

@@ -54,6 +54,50 @@ def blockwise_quant_ref(x, block: int):
     return codes.reshape(R, C).astype(jnp.int8), scale
 
 
+def fused_qgalore_update_ref(g, m, v, p_packed, p_scale, p_zero, q, wscale,
+                             u01, count, lr, *, side: str, pblock: int,
+                             wblock: int, beta1: float = 0.9,
+                             beta2: float = 0.999, eps: float = 1e-8,
+                             gscale: float = 0.25, wd: float = 0.0, **_):
+    """Oracle for the fused Q-GaLore update (same contract as the kernel).
+
+    side="right": g/m/v (M, r), P packed (N, r/2), q (M, N) int8 symmetric.
+    side="left":  g/m/v (r, N), P packed (M, r/2).
+    Returns (q', wscale', m', v'). Extra block-size kwargs are ignored so
+    this slots into the dispatch registry unchanged.
+    """
+    c = jnp.asarray(count, jnp.float32)
+    lr = jnp.asarray(lr, jnp.float32)
+    g = g.astype(jnp.float32)
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    m_hat = m_new / (1.0 - beta1 ** c)
+    v_hat = v_new / (1.0 - beta2 ** c)
+    dirn = m_hat / (jnp.sqrt(v_hat) + eps)
+
+    u4 = quant.unpack_int4(p_packed).astype(jnp.float32) - 8.0
+    d, r = u4.shape
+    P = ((u4.reshape(d, r // pblock, pblock) - p_zero[..., None])
+         * p_scale[..., None]).reshape(d, r)
+    if side == "right":
+        upd = gscale * (dirn @ P.T)               # (M, r) @ (r, N)
+    else:
+        upd = gscale * (P @ dirn)                 # (M, r) @ (r, N)
+
+    R, C = q.shape
+    w = (q.astype(jnp.float32).reshape(R, C // wblock, wblock)
+         * wscale[..., None]).reshape(R, C)
+    if wd:
+        upd = upd + wd * w
+    wn = (w - lr * upd).reshape(R, C // wblock, wblock)
+    absmax = jnp.max(jnp.abs(wn), axis=-1)
+    new_scale = jnp.maximum(absmax / 127.0, 1e-12)
+    codes = jnp.floor(wn / new_scale[..., None]
+                      + u01.reshape(R, C // wblock, wblock))
+    q_new = jnp.clip(codes, -128, 127).reshape(R, C).astype(jnp.int8)
+    return q_new, new_scale, m_new, v_new
+
+
 def flash_attention_ref(q, k, v, causal: bool = True):
     """q,k,v (B,S,H,d) → (B,S,H,d) f32 softmax attention."""
     B, S, H, d = q.shape

@@ -11,10 +11,18 @@ Two compiled variants per run:
 Gradient accumulation scans over microbatches; with the fused path the
 accumulated payload is the LOW-RANK gradient, which is also what crosses the
 data-parallel axis — the paper-beyond gradient-compression effect.
+
+The optimizer half of the step (``qgalore.apply_updates``) batches
+same-shaped leaves through one scanned program and runs eligible leaves
+through the fused update kernel (Adam + INT4 back-projection + SR requant
+in one pass); the kernel backend is chosen per platform by
+``repro.kernels.dispatch`` (pallas-tpu on TPU, pure-XLA ref elsewhere,
+``REPRO_KERNEL_BACKEND`` to override).
 """
 from __future__ import annotations
 
 import functools
+import logging
 from typing import Any, Dict, NamedTuple, Optional
 
 import jax
@@ -110,6 +118,12 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
     """
     specs = _specs_for(bundle, qcfg, param_dtype)
     seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
+
+    from repro.kernels import dispatch as kdispatch
+    logging.getLogger(__name__).info(
+        "train step: kernel backend=%s fused_update=%s batch_leaves=%s",
+        kdispatch.default_backend("fused_qgalore_update"),
+        qcfg.fused_update, qcfg.batch_leaves)
 
     def grad_phase(params, proj_trees, batch):
         """(loss, metrics, grads) on the (possibly shard-local) batch."""
