@@ -72,7 +72,57 @@ def main():
     emit("kernels/int8_pallas_interpret", (time.monotonic() - t0) * 1e6,
          "M=128;K=256;N=512;mode=interpret")
 
+    quantized_dense_bench(key)
     fused_update_bench(key)
+
+
+def quantized_dense_bench(key, m=512, k=1024, n=2048, iters=5):
+    """quantized_dense fwd + fwd/bwd vs the dequantize-then-einsum baseline
+    on the dispatch default backend (the model hot path A/B)."""
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 20), (k, n)) * 0.1
+    qt = quantize_blockwise(w, bits=8, symmetric=True)
+    backend = dispatch.default_backend("quantized_dense")
+    shape = f"M={m};K={k};N={n}"
+
+    f_q = jax.jit(lambda a: ops.quantized_dense(a, qt, dtype=jnp.float32,
+                                                backend=backend))
+    f_d = jax.jit(lambda a: a @ quant.dequantize(qt, jnp.float32))
+    us_q = _time(f_q, x, iters=iters)
+    us_d = _time(f_d, x, iters=iters)
+    emit("kernels/quantized_dense_fwd", us_q, shape + f";backend={backend}")
+    emit("kernels/dequant_dense_fwd", us_d, shape)
+
+    # fwd + bwd (dL/dx and dL/dW) through the custom VJP vs autodiff of
+    # the dequant einsum
+    wv = quant.virtualize(qt)
+
+    @jax.jit
+    def g_q(a, shadow):
+        def f(aa, sh):
+            out = ops.quantized_dense(
+                aa, quant.QVirtual(qt, sh), dtype=jnp.float32,
+                backend=backend)
+            return jnp.sum(out * out)
+        return jax.grad(f, argnums=(0, 1))(a, shadow)
+
+    @jax.jit
+    def g_d(a, wfull):
+        def f(aa, ww):
+            out = aa @ ww
+            return jnp.sum(out * out)
+        return jax.grad(f, argnums=(0, 1))(a, wfull)
+
+    wd = quant.dequantize(qt, jnp.float32)
+    us_qg = _time(g_q, x, wv.shadow, iters=iters)
+    us_dg = _time(g_d, x, wd, iters=iters)
+    emit("kernels/quantized_dense_fwdbwd", us_qg,
+         shape + f";backend={backend}")
+    emit("kernels/dequant_dense_fwdbwd", us_dg, shape)
+    emit("kernels/quantized_dense_fwd_speedup", us_d / us_q,
+         shape + ";unit=x;baseline=dequant-einsum")
+    emit("kernels/quantized_dense_fwdbwd_speedup", us_dg / us_qg,
+         shape + ";unit=x;baseline=dequant-einsum")
 
 
 def fused_update_bench(key, m=2048, n=1024, r=128, iters=3):

@@ -1,0 +1,154 @@
+"""End-to-end train-step and decode-token throughput: quantized-dense
+(INT8-native compute) vs the dequantize-then-einsum baseline.
+
+For each model the SAME quantized parameters run through two traced
+variants of the full pipeline (fused projected-backward train step +
+Q-GaLore update; serve prefill + per-token decode):
+
+* ``quantized`` — ``layers.QUANTIZED_DENSE = True`` (default): every
+  QTensor matmul streams INT8 blocks through the dispatch-registered
+  ``quantized_dense`` op; no full-precision weight view exists.
+* ``dequant``   — the legacy baseline: materialize (dequantize) each
+  weight, einsum in full precision; autodiff saves the dequantized copy,
+  and decode re-dequantizes the stacked layer pytree per token.
+
+Emits the repo-standard ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_train.json`` — the seed of the perf trajectory (CI uploads it per
+PR; compare the ``*_speedup_x`` fields across commits).
+
+    PYTHONPATH=src:. python benchmarks/train_bench.py            # full
+    PYTHONPATH=src:. python benchmarks/train_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit
+from repro.config import QGaLoreConfig, ShapeCell, TrainConfig
+from repro.data.synthetic import batch_for_bundle
+from repro.kernels import dispatch
+from repro.models import layers, model_zoo
+from repro.serve import engine
+from repro.train import step as step_lib
+
+MODELS = {"llama_60m": "llama-60m", "llama_130m": "llama-130m"}
+
+
+def _timed(fn, *args, iters=2):
+    out = fn(*args)                       # compile + warm
+    jax.block_until_ready(out)
+    t0 = time.monotonic()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.monotonic() - t0) / iters * 1e6, out
+
+
+def bench_model(arch_id: str, *, seq: int, batch: int, iters: int,
+                decode_tokens: int, smoke: bool) -> dict:
+    """{mode: {train_step_us, prefill_us, decode_token_us}} for one arch."""
+    qcfg = QGaLoreConfig(rank=32, min_dim=64, update_interval=100_000)
+    tcfg = TrainConfig(global_batch=batch, seq_len=seq, steps=iters)
+    cell = ShapeCell("bench", seq_len=seq, global_batch=batch, kind="train")
+    results: dict = {}
+    for mode in ("quantized", "dequant"):
+        layers.QUANTIZED_DENSE = (mode == "quantized")
+        try:
+            bundle = model_zoo.build_arch(arch_id, smoke=smoke,
+                                          dtype=jnp.float32)
+            state = step_lib.init_state(bundle, qcfg,
+                                        jax.random.PRNGKey(0),
+                                        param_dtype=jnp.float32)
+            raw_step, _ = step_lib.build_train_step(
+                bundle, qcfg, tcfg, impl="fused",
+                param_dtype=jnp.float32)
+            step = jax.jit(functools.partial(raw_step, refresh=False,
+                                             refresh_masks=None))
+            b = batch_for_bundle(bundle, cell, 0)
+            rng = jax.random.PRNGKey(1)
+            us_step, _ = _timed(
+                lambda s, bb: step(s, bb, 1e-3, rng)[0], state, b,
+                iters=iters)
+
+            # serving: prefill on the first half, decode token by token
+            prompt = {k: (v[:, : seq // 2]
+                          if v.ndim >= 2 and v.shape[1] == seq else v)
+                      for k, v in b.items()}
+            prefill = jax.jit(engine.build_prefill(bundle, max_len=seq + 4))
+            decode = jax.jit(engine.build_decode(bundle))
+            us_prefill, (logits, dstate) = _timed(
+                prefill, state.params, prompt, iters=max(iters // 2, 1))
+            tok = engine.sample(logits, jax.random.PRNGKey(2))
+
+            decode(state.params, dstate, tok[:, None])   # compile
+            t0 = time.monotonic()
+            st = dstate
+            for _ in range(decode_tokens):
+                logits, st = decode(state.params, st, tok[:, None])
+            jax.block_until_ready(logits)
+            us_decode = (time.monotonic() - t0) / decode_tokens * 1e6
+
+            results[mode] = {"train_step_us": us_step,
+                             "prefill_us": us_prefill,
+                             "decode_token_us": us_decode}
+        finally:
+            layers.QUANTIZED_DENSE = True
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="llama_60m,llama_130m")
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--iters", type=int, default=2)
+    ap.add_argument("--decode-tokens", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape-preserving configs (CI)")
+    ap.add_argument("--out", default="BENCH_train.json")
+    args = ap.parse_args(argv)
+
+    report = {
+        "meta": {
+            "platform": dispatch.platform(),
+            "backend": dispatch.default_backend("quantized_dense"),
+            "seq": args.seq, "batch": args.batch, "iters": args.iters,
+            "decode_tokens": args.decode_tokens, "smoke": args.smoke,
+        },
+        "results": {},
+    }
+    for name in args.models.split(","):
+        arch = MODELS[name.strip()]
+        r = bench_model(arch, seq=args.seq, batch=args.batch,
+                        iters=args.iters, decode_tokens=args.decode_tokens,
+                        smoke=args.smoke)
+        for mode, row in r.items():
+            for k, v in row.items():
+                emit(f"train_bench/{name}_{mode}_{k}", v,
+                     f"seq={args.seq};batch={args.batch};mode={mode}")
+        r["train_speedup_x"] = (r["dequant"]["train_step_us"]
+                                / r["quantized"]["train_step_us"])
+        r["decode_speedup_x"] = (r["dequant"]["decode_token_us"]
+                                 / r["quantized"]["decode_token_us"])
+        r["prefill_speedup_x"] = (r["dequant"]["prefill_us"]
+                                  / r["quantized"]["prefill_us"])
+        emit(f"train_bench/{name}_train_speedup", r["train_speedup_x"],
+             "unit=x;baseline=dequant-dense")
+        emit(f"train_bench/{name}_decode_speedup", r["decode_speedup_x"],
+             "unit=x;baseline=dequant-dense")
+        report["results"][name] = r
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}", flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -111,6 +111,118 @@ def is_qtensor(x) -> bool:
 
 
 # ---------------------------------------------------------------------------
+# QVirtual: the training-path view of a quantized weight
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QVirtual:
+    """A quantized weight paired with a gradient slot for its virtual value.
+
+    The INT8 representation stays the compute format — ``repro.kernels.ops.
+    quantized_dense`` streams ``qt``'s blocks directly — while ``shadow``
+    (a zeros array of the virtual, dequantized shape) is the float primal
+    that ``jax.vjp`` differentiates. The custom VJPs route ``dL/dW`` into
+    the shadow's cotangent, so gradients keep the repo-wide "one virtual
+    full-rank leaf per QTensor" contract without the forward ever
+    materializing ``W`` (the shadow itself is never read and is dead-code
+    eliminated by XLA).
+    """
+    qt: QTensor
+    shadow: jax.Array
+
+    def tree_flatten(self):
+        return (self.qt, self.shadow), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.qt.shape
+
+    @property
+    def ndim(self):
+        return self.qt.ndim
+
+
+def is_qvirtual(x) -> bool:
+    return isinstance(x, QVirtual)
+
+
+def virtualize(qt: QTensor) -> QVirtual:
+    """Pair a QTensor with a zeros gradient slot of its virtual shape."""
+    return QVirtual(qt, jnp.zeros(qt.shape, jnp.dtype(qt.dtype)))
+
+
+def tree_virtualize(tree):
+    """QTensor leaves → QVirtual (the differentiable training view)."""
+    return jax.tree_util.tree_map(
+        lambda l: virtualize(l) if is_qtensor(l) else l,
+        tree, is_leaf=is_qtensor)
+
+
+def tree_devirtualize_grads(tree):
+    """Collapse QVirtual-structured cotangents to the shadow (= dL/dW)
+    leaf, restoring the plain "one array per QTensor" gradient tree. Also
+    drops the float0 cotangents of the integer code arrays, which must not
+    escape scan bodies."""
+    return jax.tree_util.tree_map(
+        lambda l: l.shadow if is_qvirtual(l) else l,
+        tree, is_leaf=is_qvirtual)
+
+
+def _zero_cotangent(x: jax.Array):
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        return jnp.zeros_like(x)
+    return np.zeros(x.shape, jax.dtypes.float0)
+
+
+def zero_qtensor_cotangent(qt: QTensor):
+    """Cotangent for a QTensor primal: float0 for codes, zeros for scales."""
+    return QTensor(_zero_cotangent(qt.q), _zero_cotangent(qt.scale),
+                   None if qt.zero is None else _zero_cotangent(qt.zero),
+                   qt.bits, qt.block, qt.orig_last, qt.dtype)
+
+
+@jax.custom_vjp
+def virtual_dequantize(shadow: jax.Array, qt: QTensor) -> jax.Array:
+    """``dequantize(qt)`` whose gradient flows to ``shadow``.
+
+    Fallback for QVirtual consumers that genuinely need the materialized
+    weight (embedding gathers, MLA's absorbed decode matmul, expert
+    oracles); matmuls should use ``ops.quantized_dense`` instead, which
+    never materializes.
+    """
+    return dequantize(qt, shadow.dtype)
+
+
+def _vdeq_fwd(shadow, qt):
+    return virtual_dequantize(shadow, qt), (shadow, qt)
+
+
+def _vdeq_bwd(res, g):
+    shadow, qt = res
+    return g.astype(shadow.dtype), zero_qtensor_cotangent(qt)
+
+
+virtual_dequantize.defvjp(_vdeq_fwd, _vdeq_bwd)
+
+
+def gather_rows(qt: QTensor, idx: jax.Array) -> QTensor:
+    """Row-gather of a 2-D QTensor (e.g. embedding rows for a token batch)
+    without dequantizing the full table: codes and scales are gathered,
+    the result dequantizes to ``(*idx.shape, orig_last)``."""
+    assert qt.ndim == 2, qt.shape
+    return QTensor(jnp.take(qt.q, idx, axis=0),
+                   jnp.take(qt.scale, idx, axis=0),
+                   None if qt.zero is None else jnp.take(qt.zero, idx,
+                                                         axis=0),
+                   qt.bits, qt.block, qt.orig_last, qt.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Packing helpers (INT4)
 # ---------------------------------------------------------------------------
 

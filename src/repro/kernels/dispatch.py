@@ -135,6 +135,7 @@ def _bucket(n: int) -> int:
 # kwargs forwarded to the Pallas wrapper.
 _DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
     "int8_matmul": {"bm": 128, "bn": 256, "bk": 512},
+    "int8_matmul_t": {"bm": 128, "bn": 512, "bk": 256},
     "int4_matmul": {"bm": 128, "bk": 512},
     "sr_requant": {"br": 256, "bc": 512},
     "blockwise_quant": {"br": 256, "bc": 512},
@@ -157,6 +158,10 @@ _TABLE: Dict[Tuple[str, str, Tuple[int, ...], str], Dict[str, int]] = {
     # INT8 matmul: bf16 activations halve VMEM → wider N tiles.
     ("int8_matmul", "pallas-tpu", (4096, 4096), "bfloat16"):
         {"bm": 256, "bn": 512, "bk": 512},
+    # Transposed INT8 matmul (dL/dx, tied head): contraction runs along the
+    # quant-block axis, so wide bn tiles amortize the scale broadcasts.
+    ("int8_matmul_t", "pallas-tpu", (4096, 4096), "bfloat16"):
+        {"bm": 256, "bn": 512, "bk": 256},
     ("int4_matmul", "pallas-tpu", (4096, 4096), ""):
         {"bm": 256, "bk": 1024},
 }

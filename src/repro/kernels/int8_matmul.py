@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: BF16 activation × INT8 weight matmul with in-VMEM
+"""Pallas TPU kernels: BF16 activation × INT8 weight matmuls with in-VMEM
 block-wise dequantization.
 
 TPU adaptation of the paper's INT8 GEMM (bitsandbytes on CUDA): v5e has no
@@ -7,9 +7,18 @@ instead of 2, dequantize in VMEM, and feed the MXU in BF16. Block layout
 matches the training representation: scales per (row, 256-col group), so the
 kernel consumes optimizer output with zero relayout.
 
-Grid: (M/BM, N/BN, K/BK), K innermost; f32 accumulator lives in a VMEM
-scratch across the K loop. BN is a multiple of the quant block (256) so each
-weight tile owns whole scale groups.
+Two orientations over the SAME stored blocks:
+
+* :func:`int8_matmul`   — ``x (M, K) @ deq(W (K, N))``  (forward / dL/dW-free)
+* :func:`int8_matmul_t` — ``g (M, N) @ deq(W (K, N))^T`` (backward dL/dx and
+  the tied-embedding head, which is a matmul against ``W_emb^T``)
+
+``int8_matmul`` grid: (M/BM, N/BN, K/BK), K innermost; f32 accumulator lives
+in a VMEM scratch across the K loop. BN is a multiple of the quant block
+(256) so each weight tile owns whole scale groups. ``int8_matmul_t`` walks
+(M/BM, K/BK, N/BN) with N innermost — the contraction runs along the
+quant-block axis, so each program still dequantizes whole scale groups and
+no transposed copy of the weight ever exists in HBM.
 """
 from __future__ import annotations
 
@@ -66,3 +75,52 @@ def int8_matmul(x, q, scale, *, block: int = 256, bm: int = 128,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, q, scale)
+
+
+def _kernel_t(g_ref, q_ref, s_ref, o_ref, acc_ref, *, block: int, n_n: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    g = g_ref[...].astype(jnp.float32)            # (BM, BN)
+    q = q_ref[...].astype(jnp.float32)            # (BK, BN)
+    s = s_ref[...]                                # (BK, BN // block)
+    BK, BN = q.shape
+    w = (q.reshape(BK, BN // block, block) * s[..., None]).reshape(BK, BN)
+    acc_ref[...] += jax.lax.dot_general(
+        g, w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_n - 1)
+    def _done():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "bm", "bn", "bk", "interpret"))
+def int8_matmul_t(g, q, scale, *, block: int = 256, bm: int = 128,
+                  bn: int = 256, bk: int = 512, interpret: bool = True):
+    """g (M,N) bf16/f32 @ dequant(q (K,N) int8, scale (K, N/block))^T → (M,K).
+
+    Streams the SAME int8 blocks as :func:`int8_matmul` (no transposed
+    weight copy); the contraction runs over N, the quant-block axis.
+    Shapes must tile evenly (the ops.py wrapper pads); BN % block == 0.
+    """
+    M, N = g.shape
+    K, Nq = q.shape
+    assert N == Nq and N % block == 0 and bn % block == 0
+    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
+    grid = (M // bm, K // bk, N // bn)
+    return pl.pallas_call(
+        functools.partial(_kernel_t, block=block, n_n=grid[2]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, k, n: (i, n)),
+            pl.BlockSpec((bk, bn), lambda i, k, n: (k, n)),
+            pl.BlockSpec((bk, bn // block), lambda i, k, n: (k, n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, k, n: (i, k)),
+        out_shape=jax.ShapeDtypeStruct((M, K), g.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(g, q, scale)

@@ -17,6 +17,16 @@ def int8_matmul_ref(x, q, scale, block: int):
     return x.astype(jnp.float32) @ w
 
 
+def int8_matmul_t_ref(g, q, scale, block: int):
+    """g (M,N) @ dequant(q (K,N) int8, scale (K, N/block))^T → (M,K) f32.
+    Same stored blocks as :func:`int8_matmul_ref`, contracted over N."""
+    K, N = q.shape
+    w = q.astype(jnp.float32).reshape(K, N // block, block) \
+        * scale[..., None]
+    w = w.reshape(K, N)
+    return g.astype(jnp.float32) @ w.T
+
+
 def int4_matmul_ref(g, packed, scale, zero, block: int):
     """g (M,K) @ dequant_int4(packed (K, R/2), scale/zero (K, R/block))
     → (M,R) f32. Asymmetric nibbles (paper's INT4 projection)."""

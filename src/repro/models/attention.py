@@ -316,7 +316,11 @@ def mla_decode(p, x, cfg: ModelConfig, *, cache, length,
     c_cache = c_cache * (1 - oh[..., None]) + oh[..., None] * c_kv_new
     r_cache = r_cache * (1 - oh[..., None]) + oh[..., None] * \
         k_rope_new[:, :, 0, :]
-    # absorb W_uk into q, W_uv into the context read-out
+    # absorb W_uk into q, W_uv into the context read-out. This is the ONE
+    # decode-path weight materialization left: the absorbed form needs
+    # wkv_b reshaped to (rank, H, nope+v), which the 2-D INT8-streaming
+    # quantized_dense cannot express; with QVirtual weights the gradient
+    # still routes to the virtual-weight shadow.
     w_ukv = layers.materialize(p["wkv_b"], dtype).reshape(
         m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
     w_uk = w_ukv[..., : m.qk_nope_head_dim]      # (rank, H, nope)

@@ -16,6 +16,12 @@ powers three executions:
 * **serving** (``repro.serve``): per-segment prefill/decode with stacked
   caches.
 
+All three executions consume INT8 (``QTensor``) weights natively: layer
+params flow into the blocks quantized (serving) or virtualized
+(``QVirtual``, training), and every matmul inside a block streams the
+INT8 representation through ``quantized_dense`` — see
+``repro.models.layers`` and ``docs/kernels.md``.
+
 ``carry`` is a dict with at least ``h`` (hidden states) and ``aux``
 (accumulated auxiliary losses, e.g. MoE load-balance); architectures may add
 extras (``x0`` for Zamba's shared-block input, ``memory`` for enc-dec).

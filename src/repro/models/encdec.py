@@ -132,8 +132,8 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
     def embed(params, batch):
         frames = batch["frames"].astype(dtype)       # stubbed audio frontend
         h = rmsnorm(frames, params["frame_norm"], cfg.rmsnorm_eps)
-        emb = layers.materialize(params["embedding"], dtype)
-        dec_h = jnp.take(emb, batch["tokens"], axis=0)
+        dec_h = layers.embed_lookup(params["embedding"], batch["tokens"],
+                                    dtype)
         B, Se = h.shape[:2]
         Sd = dec_h.shape[1]
         carry = {"h": h, "dec_h": dec_h,
@@ -194,8 +194,7 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
         }
 
     def embed_decode(params, tokens, extras):
-        emb = layers.materialize(params["embedding"], dtype)
-        h = jnp.take(emb, tokens, axis=0)
+        h = layers.embed_lookup(params["embedding"], tokens, dtype)
         carry = {"h": h, "memory": extras["memory"],
                  "aux": jnp.zeros((), jnp.float32)}
         return carry, {}

@@ -1,8 +1,20 @@
 """Shared neural-net building blocks (pure JAX, quantization-aware).
 
-Every matmul goes through :func:`dense`, which transparently handles
-``QTensor`` (INT8) weights — dequantizing on the fly (the Pallas
-``int8_matmul`` kernel replaces this on TPU; see ``repro.kernels``).
+Every matmul goes through :func:`dense` (or its siblings :func:`dense_t`
+for transposed/tied weights and :func:`dense_batched` for expert stacks),
+which route ``QTensor``/``QVirtual`` (INT8) weights through the
+dispatch-registered ``quantized_dense`` op: the weight streams as INT8
+blocks in both the forward and the ``dL/dx`` backward, and is never
+materialized in full precision (``repro.kernels.ops``). Embedding tables
+are consumed through :func:`embed_lookup`, which gathers INT8 rows per
+token instead of dequantizing the whole table. ``materialize`` remains the
+escape hatch for consumers that genuinely need the full-precision array
+(MLA's absorbed decode matmul, test oracles) — with QVirtual weights its
+gradient still flows to the virtual-weight slot.
+
+Set ``REPRO_QUANTIZED_DENSE=0`` (or ``layers.QUANTIZED_DENSE = False``
+before tracing) to fall back to the legacy dequantize-then-einsum path —
+the A/B baseline used by ``benchmarks/train_bench.py``.
 
 Parameter trees are plain nested dicts; leaf names follow the conventions
 consumed by ``repro.distributed.sharding`` (wq/wk/wv/wo, wi/wg/wd, experts_*,
@@ -11,13 +23,19 @@ embedding, head, *_norm).
 from __future__ import annotations
 
 import math
+import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import quant
-from repro.core.quant import QTensor
+from repro.core.quant import QTensor, QVirtual
+from repro.kernels import ops as kops
+
+# Trace-time switch: route QTensor/QVirtual matmuls through the INT8
+# quantized_dense kernels (default) or the legacy materialize+einsum path.
+QUANTIZED_DENSE = os.environ.get("REPRO_QUANTIZED_DENSE", "1") != "0"
 
 
 # ---------------------------------------------------------------------------
@@ -48,15 +66,88 @@ def stacked_init(init_fn, key, num: int, *args, **kwargs):
 # ---------------------------------------------------------------------------
 
 def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
+    """Full-precision view of a (possibly quantized) weight.
+
+    For QVirtual weights the dequantization carries a custom VJP that
+    routes the gradient to the virtual-weight shadow — use only where the
+    materialized array is genuinely required; matmuls belong in
+    :func:`dense`/:func:`dense_t`/:func:`dense_batched`.
+    """
+    if isinstance(w, QVirtual):
+        return quant.virtual_dequantize(w.shadow, w.qt).astype(dtype)
     if isinstance(w, QTensor):
         return quant.dequantize(w, dtype)
     return w.astype(dtype)
 
 
+def _qdense_eligible(w, ndim: int) -> bool:
+    if not QUANTIZED_DENSE or not isinstance(w, (QTensor, QVirtual)):
+        return False
+    qt = w.qt if isinstance(w, QVirtual) else w
+    return qt.bits == 8 and qt.zero is None and qt.ndim == ndim
+
+
 def dense(x: jax.Array, w, dtype=jnp.bfloat16) -> jax.Array:
-    """x @ w with on-the-fly dequantization of INT8 weights."""
+    """x (..., d) @ w (d, f); INT8 weights stream through the
+    ``quantized_dense`` kernel (never materialized)."""
+    if _qdense_eligible(w, 2):
+        return kops.quantized_dense(x, w, dtype=dtype)
     wm = materialize(w, dtype)
     return jnp.einsum("...d,df->...f", x.astype(dtype), wm)
+
+
+def dense_t(x: jax.Array, w, dtype=jnp.bfloat16) -> jax.Array:
+    """x (..., d) @ w (v, d)^T — the tied-embedding head matmul; INT8
+    weights stream through the transposed kernel over the same blocks."""
+    if _qdense_eligible(w, 2):
+        return kops.quantized_dense_t(x, w, dtype=dtype)
+    wm = materialize(w, dtype)
+    return jnp.einsum("...d,vd->...v", x.astype(dtype), wm)
+
+
+def dense_batched(x: jax.Array, w, dtype=jnp.bfloat16) -> jax.Array:
+    """Paired-leading-axis matmul x (E, ..., d) @ w (E, d, f) → (E, ..., f)
+    (MoE expert stacks); INT8 expert weights stay INT8 per expert."""
+    if _qdense_eligible(w, 3):
+        return kops.quantized_dense_batched(x, w, dtype=dtype)
+    wm = materialize(w, dtype)
+    return jnp.einsum("e...d,edf->e...f", x.astype(dtype), wm)
+
+
+def embed_lookup(w, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    """Embedding-table row lookup. For INT8 tables, gathers codes + scales
+    per token and dequantizes only the gathered rows — the full table is
+    never materialized (the big decode-path win for large vocabs)."""
+    if isinstance(w, (QTensor, QVirtual)) and QUANTIZED_DENSE:
+        qt, shadow = (w.qt, w.shadow) if isinstance(w, QVirtual) \
+            else (w, None)
+        if qt.ndim == 2:
+            if shadow is None:
+                rows = quant.dequantize(quant.gather_rows(qt, tokens))
+            else:
+                rows = _embed_rows(tokens, shadow, qt)
+            return rows.astype(dtype)
+    return jnp.take(materialize(w, dtype), tokens, axis=0)
+
+
+@jax.custom_vjp
+def _embed_rows(tokens, shadow, qt):
+    return quant.dequantize(quant.gather_rows(qt, tokens), shadow.dtype)
+
+
+def _embed_rows_fwd(tokens, shadow, qt):
+    return _embed_rows(tokens, shadow, qt), (tokens, shadow, qt)
+
+
+def _embed_rows_bwd(res, g):
+    tokens, shadow, qt = res
+    d_shadow = jnp.zeros(shadow.shape, shadow.dtype) \
+        .at[tokens].add(g.astype(shadow.dtype))
+    return (quant._zero_cotangent(tokens), d_shadow,
+            quant.zero_qtensor_cotangent(qt))
+
+
+_embed_rows.defvjp(_embed_rows_fwd, _embed_rows_bwd)
 
 
 # ---------------------------------------------------------------------------
@@ -68,7 +159,8 @@ def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)
     y = xf * jax.lax.rsqrt(var + eps)
-    return (y * (1.0 + w.astype(jnp.float32))).astype(dt)
+    # materialize: stacked norm scales can arrive quantized (2-D leaves)
+    return (y * (1.0 + materialize(w, jnp.float32))).astype(dt)
 
 
 def rmsnorm_init(dim: int) -> jax.Array:

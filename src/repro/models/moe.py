@@ -107,13 +107,10 @@ def moe_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
                            unique_indices=True)
     expert_in = buf[: E * C].reshape(E, C, d)
 
-    # --- batched expert FFN --------------------------------------------------
-    wi = layers.materialize(p["experts_wi"], dtype)
-    wg = layers.materialize(p["experts_wg"], dtype)
-    wd = layers.materialize(p["experts_wd"], dtype)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, wg)) * \
-        jnp.einsum("ecd,edf->ecf", expert_in, wi)
-    expert_out = jnp.einsum("ecf,efd->ecd", h, wd)  # (E, C, d)
+    # --- batched expert FFN (INT8 expert stacks stay INT8 per expert) -------
+    h = jax.nn.silu(layers.dense_batched(expert_in, p["experts_wg"], dtype)) \
+        * layers.dense_batched(expert_in, p["experts_wi"], dtype)
+    expert_out = layers.dense_batched(h, p["experts_wd"], dtype)  # (E, C, d)
 
     # --- combine --------------------------------------------------------------
     out_flat = expert_out.reshape(E * C, d)
@@ -182,12 +179,10 @@ def moe_apply_ep(p: dict, x: jax.Array, cfg: ModelConfig, *,
     recv = jax.lax.all_to_all(send, ep_axis, split_axis=0, concat_axis=1,
                               tiled=True)
 
-    wi = layers.materialize(p["experts_wi"], dtype)   # (E_loc, d, f) local
-    wg = layers.materialize(p["experts_wg"], dtype)
-    wd = layers.materialize(p["experts_wd"], dtype)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", recv, wg)) * \
-        jnp.einsum("ecd,edf->ecf", recv, wi)
-    expert_out = jnp.einsum("ecf,efd->ecd", h, wd)    # (E_loc, n·C, d)
+    # local (E_loc, d, f) expert stacks, consumed in INT8 per expert
+    h = jax.nn.silu(layers.dense_batched(recv, p["experts_wg"], dtype)) \
+        * layers.dense_batched(recv, p["experts_wi"], dtype)
+    expert_out = layers.dense_batched(h, p["experts_wd"], dtype)
 
     # ---- reverse exchange: back to (E, C, d) on the token-owner shard ----
     back = jax.lax.all_to_all(expert_out, ep_axis, split_axis=1,

@@ -10,6 +10,7 @@ group (B/C shared across heads).
 """
 from __future__ import annotations
 
+import functools
 import math
 from typing import NamedTuple, Optional, Tuple
 
@@ -168,19 +169,23 @@ def mamba2_apply(p: dict, x: jax.Array, cfg: ModelConfig, *,
     sc: SSMConfig = cfg.ssm
     Bb, S, _ = x.shape
     z, xBC_pre, dt_raw, d_inner, conv_ch, H = _split_proj(p, x, cfg, dtype)
-    xBC = jax.nn.silu(_causal_conv(xBC_pre.astype(jnp.float32),
-                                   p["conv_w"], p["conv_b"])).astype(dtype)
+    # materialize: stacked per-layer vectors (conv_b (L,C), dt_bias/A_log/D
+    # (L,H)) can arrive quantized — no-op for plain arrays
+    mat = functools.partial(layers.materialize, dtype=jnp.float32)
+    xBC = jax.nn.silu(_causal_conv(
+        xBC_pre.astype(jnp.float32),
+        mat(p["conv_w"]), mat(p["conv_b"]))).astype(dtype)
     xs = xBC[..., :d_inner]
     Bmat = xBC[..., d_inner: d_inner + sc.state_dim].astype(jnp.float32)
     Cmat = xBC[..., d_inner + sc.state_dim:].astype(jnp.float32)
-    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
-    A = -jnp.exp(p["A_log"])                                         # (H,)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + mat(p["dt_bias"]))
+    A = -jnp.exp(mat(p["A_log"]))                                    # (H,)
     xh = xs.reshape(Bb, S, H, sc.head_dim).astype(jnp.float32)
     y, final_state = ssd_chunked(
         xh * dt[..., None], dt * A, Bmat, Cmat,
         chunk=min(sc.chunk_size, S),
         initial_state=None if initial_cache is None else initial_cache.ssm)
-    y = y + xh * p["D"][:, None]
+    y = y + xh * mat(p["D"])[:, None]
     y = y.reshape(Bb, S, d_inner).astype(dtype)
     y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.rmsnorm_eps)
     out = dense(y, p["out_proj"], dtype)
@@ -199,21 +204,24 @@ def mamba2_decode(p: dict, x: jax.Array, cfg: ModelConfig, *,
     sc: SSMConfig = cfg.ssm
     Bb = x.shape[0]
     z, xBC_raw, dt_raw, d_inner, conv_ch, H = _split_proj(p, x, cfg, dtype)
+    mat = functools.partial(layers.materialize, dtype=jnp.float32)
     # rolling conv window
     window = jnp.concatenate([cache.conv, xBC_raw.astype(dtype)], axis=1)
-    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
-                          p["conv_w"]) + p["conv_b"]
+    conv_out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32),
+        mat(p["conv_w"])) + mat(p["conv_b"])
     xBC = jax.nn.silu(conv_out)[:, None, :].astype(dtype)
     new_conv = window[:, 1:, :]
     xs = xBC[..., :d_inner]
     Bmat = xBC[0:, 0, d_inner: d_inner + sc.state_dim].astype(jnp.float32)
     Cmat = xBC[0:, 0, d_inner + sc.state_dim:].astype(jnp.float32)
-    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
-    A = -jnp.exp(p["A_log"])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) +
+                         mat(p["dt_bias"]))
+    A = -jnp.exp(mat(p["A_log"]))
     xh = xs[:, 0].reshape(Bb, H, sc.head_dim).astype(jnp.float32)
     y, new_ssm = ssd_recurrent_step(cache.ssm, xh * dt[..., None],
                                     dt * A, Bmat, Cmat)
-    y = y + xh * p["D"][:, None]
+    y = y + xh * mat(p["D"])[:, None]
     y = y.reshape(Bb, 1, d_inner).astype(dtype)
     y = rmsnorm(y * jax.nn.silu(z), p["ssm_norm"], cfg.rmsnorm_eps)
     return dense(y, p["out_proj"], dtype), Mamba2Cache(new_conv, new_ssm)

@@ -130,8 +130,8 @@ def _cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype):
 # ---------------------------------------------------------------------------
 
 def _embed_tokens(params, tokens, cfg: ModelConfig, dtype):
-    emb = layers.materialize(params["embedding"], dtype)
-    h = jnp.take(emb, tokens, axis=0)
+    # INT8 tables: per-token row gather + dequant, never the full table
+    h = layers.embed_lookup(params["embedding"], tokens, dtype)
     if cfg.name.startswith("gemma"):
         h = h * math.sqrt(cfg.d_model)
     return h
@@ -140,8 +140,8 @@ def _embed_tokens(params, tokens, cfg: ModelConfig, dtype):
 def _head_logits(params, h, cfg: ModelConfig, dtype):
     h = rmsnorm(h, params["final_norm"], cfg.rmsnorm_eps)
     if cfg.tie_embeddings:
-        w = layers.materialize(params["embedding"], dtype)
-        logits = jnp.einsum("...d,vd->...v", h, w)
+        # tied head: h @ W_emb^T — streams the same INT8 blocks transposed
+        logits = layers.dense_t(h, params["embedding"], dtype)
     else:
         logits = dense(h, params["head"], dtype)
     return softcap(logits, cfg.logit_softcap)

@@ -233,7 +233,8 @@ def _mlstm_qkvg(p, u, cfg, dtype):
     q = dense(u, p["wq"], dtype).reshape(B, S, H, dh)
     k = dense(u, p["wk"], dtype).reshape(B, S, H, dh)
     v = dense(u, p["wv"], dtype).reshape(B, S, H, dh)
-    gates = dense(u, p["w_gates"], jnp.float32) + p["gate_bias"]
+    gates = dense(u, p["w_gates"], jnp.float32) \
+        + layers.materialize(p["gate_bias"], jnp.float32)
     logi = gates[..., :H]
     logf = jax.nn.log_sigmoid(gates[..., H:])
     return q, k, v, logi, logf
@@ -296,9 +297,12 @@ def slstm_block_apply(p, x, cfg: ModelConfig, *, dtype=jnp.bfloat16,
                       return_cache: bool = False):
     B, S, d = x.shape
     u = rmsnorm(x, p["norm"], cfg.rmsnorm_eps)
-    gx = dense(u, p["w_gates"], jnp.float32) + p["gate_bias"]
+    gx = dense(u, p["w_gates"], jnp.float32) \
+        + layers.materialize(p["gate_bias"], jnp.float32)
     st = cache if cache is not None else slstm_init_state(B, d)
-    hs, final = slstm_scan(gx, p["r_gates"], st, cfg.num_heads)
+    hs, final = slstm_scan(gx, layers.materialize(p["r_gates"],
+                                                  jnp.float32),
+                           st, cfg.num_heads)
     h = rmsnorm(hs.astype(dtype), p["out_norm"], cfg.rmsnorm_eps)
     y = x + h
     y = y + layers.ffn_apply(p["ffn"],

@@ -95,8 +95,7 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
         }
 
     def embed(params, batch):
-        emb = layers.materialize(params["embedding"], dtype)
-        h = jnp.take(emb, batch["tokens"], axis=0)
+        h = layers.embed_lookup(params["embedding"], batch["tokens"], dtype)
         carry = {"h": h, "aux": jnp.zeros((), jnp.float32)}
         return carry, {}
 

@@ -35,7 +35,9 @@ def _lora_init(key, in_dim, out_dim, rank):
 
 
 def _lora_apply(p, x, dtype):
-    return (x @ p["A"].astype(dtype)) @ p["B"].astype(dtype)
+    # dense handles quantized adapters (rank >= the predicate floor)
+    # through the INT8-native compute path
+    return dense(dense(x, p["A"], dtype), p["B"], dtype)
 
 
 def shared_block_init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
@@ -211,8 +213,7 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
         }
 
     def embed(params, batch):
-        emb = layers.materialize(params["embedding"], dtype)
-        h = jnp.take(emb, batch["tokens"], axis=0)
+        h = layers.embed_lookup(params["embedding"], batch["tokens"], dtype)
         B, S = h.shape[:2]
         positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
                                      (B, S))

@@ -1,6 +1,13 @@
 """Serving runtime: batched prefill + single-token decode over the generic
 segment contract, with stacked per-layer caches.
 
+Quantized (INT8 QTensor) parameters are consumed **directly**: the model
+layers route every QTensor matmul through the ``quantized_dense`` kernels
+(`repro.kernels.ops`), so prefill and decode stream weights at 1 byte/elem
+with zero per-token dequantization — the old per-step
+``tree_dequantize`` of the whole stacked layer pytree inside the decode
+scan body is gone.
+
 ``DecodeState`` is a pure pytree → the decode step jits/pjits cleanly; cache
 sharding (see ``repro.serve.shard``) puts the KV time axis on the model mesh
 axis for long contexts (context-parallel decode) and batch on data.
@@ -13,7 +20,6 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import quant
 from repro.models.base import ModelBundle
 
 
@@ -21,10 +27,6 @@ class DecodeState(NamedTuple):
     caches: Dict[str, Any]          # {seg_key: stacked per-layer caches}
     lengths: jax.Array              # (B,) valid positions
     extras: Dict[str, Any]          # persistent carry entries (e.g. memory)
-
-
-def _deq(tree):
-    return quant.tree_dequantize(tree)
 
 
 def build_prefill(bundle: ModelBundle, max_len: int):
@@ -39,12 +41,12 @@ def build_prefill(bundle: ModelBundle, max_len: int):
                 carry = seg.pre(params, carry, ctx)
             if seg.prefill is None:
                 def body(c, lp, _seg=seg):
-                    return _seg.apply(_deq(lp), c, ctx), None
+                    return _seg.apply(lp, c, ctx), None
                 from repro.models.base import scan_layers
                 carry, _ = scan_layers(body, carry, params[key])
             else:
                 def body(c, lp, _seg=seg):
-                    return _seg.prefill(_deq(lp), c, ctx)
+                    return _seg.prefill(lp, c, ctx)
                 from repro.models.base import scan_layers
                 carry, cache = scan_layers(body, carry, params[key])
                 caches[key] = cache
@@ -74,7 +76,7 @@ def build_decode(bundle: ModelBundle):
                 continue
             def body(c, xs, _seg=seg):
                 lp, cache = xs
-                new_c, new_cache = _seg.decode(_deq(lp), c, cache, ctx)
+                new_c, new_cache = _seg.decode(lp, c, cache, ctx)
                 return new_c, new_cache
             from repro.models.base import scan_layers
             carry, new_cache = scan_layers(

@@ -16,8 +16,14 @@ Consequences (matching the paper's memory story):
   * under data parallelism the cross-replica reduction runs on the low-rank
     payload (gradient compression for free — see train.step).
 
-Quantized (INT8 QTensor) parameters are dequantized per layer *inside* the
-scan bodies, so the BF16 weight view is also transient.
+Quantized (INT8 QTensor) parameters are *virtualized* per layer inside the
+scan bodies (``quant.tree_virtualize``): the model consumes the INT8 codes
+directly through the ``quantized_dense`` custom-VJP op — forward and the
+``dL/dx`` backward stream INT8 blocks, and no full-precision weight view
+exists even transiently. The ``QVirtual`` shadow (a dead zeros array of the
+virtual shape) is what ``jax.vjp`` differentiates; its cotangent IS the
+virtual-weight gradient, which the backward scan then projects low-rank as
+before.
 """
 from __future__ import annotations
 
@@ -34,8 +40,10 @@ from repro.models.base import ModelBundle, SegmentDef
 _FLOAT0 = jax.dtypes.float0
 
 
-def _deq(tree):
-    return quant.tree_dequantize(tree)
+def _virt(tree):
+    """QTensor leaves → QVirtual: INT8 stays the compute format, gradients
+    land on the (virtual-shaped) shadow cotangent."""
+    return quant.tree_virtualize(tree)
 
 
 def _is_float(x) -> bool:
@@ -88,7 +96,7 @@ def _project_cotangents(g_lp, P_lp):
 def segment_forward(seg: SegmentDef, seg_params, carry, ctx):
     """Forward scan saving per-layer input carries."""
     def body(c, lp):
-        return seg.apply(_deq(lp), c, ctx), c
+        return seg.apply(_virt(lp), c, ctx), c
     from repro.models.base import scan_layers
     return scan_layers(body, carry, seg_params)
 
@@ -110,10 +118,14 @@ def segment_backward(seg: SegmentDef, seg_params, saved, g_carry, ctx,
         g_c, g_ctx = state
         lp, c_in, P_l = inp
 
-        lp_v = _deq(lp)
+        lp_v = _virt(lp)
         _, vjp = jax.vjp(lambda p, c, x: seg.apply(p, c, x),
                          lp_v, c_in, ctx)
         g_lp, g_cin, g_ctx_l = vjp(g_c)
+        # collapse QVirtual cotangents to the shadow (= dL/dW virtual):
+        # restores the plain per-QTensor gradient leaf and drops the
+        # float0 code cotangents before they hit the scan ys.
+        g_lp = quant.tree_devirtualize_grads(g_lp)
         g_lp = _project_cotangents(g_lp, P_l)
         g_cin = _tree_add(_zero_cotangent_carry(c_in), g_cin)
         return (g_cin, _tree_add(g_ctx, g_ctx_l)), g_lp
@@ -138,7 +150,7 @@ def fused_value_and_grad(bundle: ModelBundle, params, batch,
     """
     seg_keys = [bundle.seg_key(i) for i in range(len(bundle.segments))]
     nonseg = {k: v for k, v in params.items() if k not in seg_keys}
-    nonseg_v = _deq(nonseg)
+    nonseg_v = _virt(nonseg)
 
     # ---- forward ----
     (carry, ctx), vjp_embed = jax.vjp(
@@ -187,18 +199,27 @@ def fused_value_and_grad(bundle: ModelBundle, params, batch,
 
     grads = {**g_nonseg, **g_segs}
     grads = {k: grads[k] for k in params.keys()}
+    grads = quant.tree_devirtualize_grads(grads)
     return (loss, metrics), grads
 
 
 def simple_value_and_grad(bundle: ModelBundle, params, batch):
-    """Oracle path: plain jax.grad through the scanned forward (full-rank
-    grads; higher peak memory). Used for tests and small baselines."""
+    """Oracle path: one vjp through the scanned forward (full-rank grads;
+    higher peak memory). Used for tests and small baselines.
+
+    Uses ``jax.vjp`` rather than ``value_and_grad`` because the virtualized
+    params tree carries the (non-differentiable) INT8 code arrays alongside
+    the float shadows; their float0 cotangents are dropped on extraction.
+    """
     from repro.models import base
 
-    def loss_of(virt):
-        return base.loss_fn(bundle, virt, batch)
+    virt = _virt(params)
 
-    virt = _deq(params)
-    (loss, metrics), grads = jax.value_and_grad(
-        loss_of, has_aux=True)(virt)
+    def loss_of(v):
+        loss, metrics = base.loss_fn(bundle, v, batch)
+        return loss, metrics
+
+    loss, vjp, metrics = jax.vjp(loss_of, virt, has_aux=True)
+    grads, = vjp(jnp.ones((), loss.dtype))
+    grads = quant.tree_devirtualize_grads(grads)
     return (loss, metrics), grads

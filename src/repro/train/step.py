@@ -1,5 +1,12 @@
 """The pjit-able training step: fused projected backward + Q-GaLore update.
 
+INT8 (QTensor) weights are the native compute format throughout: the
+forward/backward consume them through the ``quantized_dense`` custom-VJP op
+(`repro.kernels.ops`), so the training step never materializes a
+full-precision weight — the per-layer dL/dW appears transiently, is
+projected low-rank inside the backward scan, and the fused Q-GaLore update
+kernel writes the new INT8 codes without leaving VMEM.
+
 Two compiled variants per run:
   * ``refresh=False`` — steady state: grads for GaLore leaves are emitted
     low-rank straight out of the backward scan (never materializing the
@@ -120,9 +127,13 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
     seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
 
     from repro.kernels import dispatch as kdispatch
+    from repro.models import layers as _layers
     logging.getLogger(__name__).info(
-        "train step: kernel backend=%s fused_update=%s batch_leaves=%s",
+        "train step: kernel backend=%s quantized_dense=%s (backend=%s) "
+        "fused_update=%s batch_leaves=%s",
         kdispatch.default_backend("fused_qgalore_update"),
+        _layers.QUANTIZED_DENSE,
+        kdispatch.default_backend("quantized_dense"),
         qcfg.fused_update, qcfg.batch_leaves)
 
     def grad_phase(params, proj_trees, batch):

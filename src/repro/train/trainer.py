@@ -190,15 +190,10 @@ class Trainer:
         """Held-out loss on batches the training never sees."""
         from repro.models import base
         losses = []
-        fn = jax.jit(lambda p, b: base.loss_fn(self.bundle,
-                                               quantless(p), b)[0])
+        # INT8 params are consumed natively by the model (quantized_dense)
+        fn = jax.jit(lambda p, b: base.loss_fn(self.bundle, p, b)[0])
         for i in range(n_batches):
             batch = batch_for_bundle(self.bundle, self.cell, offset + i,
                                      self.tcfg.seed + 1)
             losses.append(float(fn(self.state.params, batch)))
         return float(np.mean(losses))
-
-
-def quantless(params):
-    from repro.core import quant
-    return quant.tree_dequantize(params)
