@@ -1,0 +1,262 @@
+"""Serving throughput/latency: continuous batching vs the lockstep baseline.
+
+One request set (mixed prompt lengths, mixed output lengths, greedy) runs
+through both engines on the SAME quantized-weight decode path:
+
+* ``lockstep`` — ``engine.generate`` semantics: FIFO groups of
+  ``num_slots`` requests, each group padded to its longest prompt and
+  decoded to its longest output; every request in a group waits for the
+  whole group (the pre-scheduler serving model).
+* ``continuous`` — ``serve.scheduler.Scheduler``: requests admitted into
+  free slots mid-flight, per-slot lengths/EOS tracking, retirement frees
+  the slot for the next request.
+
+Both engines are verified TOKEN-IDENTICAL on the request set before
+timing (greedy decode is row-independent), so the speedup is
+apples-to-apples. Timing is best-of-``--rounds`` warm runs with the two
+engines INTERLEAVED per round (machine drift hits both evenly; compile
+amortized — the scheduler reuses its compiled programs via ``reset()``).
+
+Emits the repo-standard ``name,us_per_call,derived`` CSV rows and writes
+``BENCH_serve.json``: aggregate generated tokens/sec, p50/p99 request
+latency, per offered arrival rate (``inf`` = all requests at t=0, plus
+finite requests/sec schedules), continuous-vs-lockstep speedup.
+
+    PYTHONPATH=src:. python benchmarks/serve_bench.py            # full
+    PYTHONPATH=src:. python benchmarks/serve_bench.py --smoke    # CI smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+from repro.config import QGaLoreConfig
+from repro.kernels import dispatch
+from repro.models import model_zoo
+from repro.serve import engine
+from repro.serve.scheduler import Request, Scheduler, _bucket
+from repro.train import step as step_lib
+
+MODELS = {"llama_60m": "llama-60m", "llama_130m": "llama-130m"}
+PAD = 0
+
+
+def make_requests(n: int, *, prompt_lo: int, prompt_hi: int, out_lo: int,
+                  out_hi: int, vocab: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for rid in range(n):
+        L = int(rng.integers(prompt_lo, prompt_hi + 1))
+        N = int(rng.integers(out_lo, out_hi + 1))
+        toks = rng.integers(1, vocab, size=L).astype(np.int32)
+        reqs.append(Request(rid=rid, tokens=toks, max_new_tokens=N))
+    return reqs
+
+
+def make_lockstep_runner(bundle, params, reqs, *, num_slots: int,
+                         max_len: int, bucket: int):
+    """FIFO groups of ``num_slots``; ``run_once() -> (outputs, wall_s,
+    latencies)``.
+
+    Shares one jitted prefill/decode across groups (same compiled programs
+    the old ``engine.generate`` host loop would build) — a group only pays
+    compile for a new padded-prompt bucket, like scheduler admission."""
+    prefill = jax.jit(engine.build_prefill(bundle, max_len, pad_id=None))
+    decode = jax.jit(engine.build_decode(bundle))
+
+    def run_once():
+        outputs, latencies = {}, {}
+        t0 = time.monotonic()
+        for g in range(0, len(reqs), num_slots):
+            group = reqs[g: g + num_slots]
+            B = len(group)
+            Lp = _bucket(max(len(r.tokens) for r in group), bucket)
+            toks = np.full((B, Lp), PAD, np.int32)
+            for i, r in enumerate(group):
+                toks[i, : len(r.tokens)] = r.tokens
+            lengths = jnp.asarray([len(r.tokens) for r in group], jnp.int32)
+            batch = {"tokens": jnp.asarray(toks), "lengths": lengths}
+            steps = max(r.max_new_tokens for r in group)
+
+            logits, state = prefill(params, batch)
+            tok = engine.sample(logits, jax.random.PRNGKey(0))
+            emitted = [tok]
+            for _ in range(steps - 1):
+                logits, state = decode(params, state, tok[:, None])
+                tok = engine.sample(logits, jax.random.PRNGKey(0))
+                emitted.append(tok)
+            out = np.stack([np.asarray(t) for t in emitted], axis=1)
+            t_done = time.monotonic() - t0
+            for i, r in enumerate(group):
+                outputs[r.rid] = out[i, : r.max_new_tokens].tolist()
+                latencies[r.rid] = t_done
+        return outputs, time.monotonic() - t0, latencies
+
+    return run_once
+
+
+def make_continuous_runner(bundle, params, reqs, *, num_slots: int,
+                           max_len: int, bucket: int, arrivals=None):
+    """``run_once() -> (outputs, wall_s, latencies, stats)`` over a reused
+    scheduler (``reset()`` keeps the compiled programs)."""
+    sched = Scheduler(bundle, params, num_slots=num_slots, max_len=max_len,
+                      pad_id=PAD, prompt_bucket=bucket, dtype=jnp.float32)
+
+    def run_once():
+        sched.reset()
+        t0 = time.monotonic()
+        comps = sched.run(reqs, arrivals=arrivals)
+        wall = time.monotonic() - t0
+        outputs = {c.rid: list(c.tokens) for c in comps}
+        latencies = {c.rid: c.latency for c in comps}
+        return outputs, wall, latencies, dict(sched.stats)
+
+    return run_once
+
+
+def _best(old, new):
+    return new if old is None or new[1] < old[1] else old
+
+
+def _metrics(outputs, wall, latencies):
+    total = sum(len(v) for v in outputs.values())
+    lats = np.asarray(sorted(latencies.values()))
+    return {
+        "tokens": total,
+        "wall_s": wall,
+        "tokens_per_s": total / wall if wall > 0 else float("inf"),
+        "p50_latency_ms": float(np.percentile(lats, 50) * 1e3),
+        "p99_latency_ms": float(np.percentile(lats, 99) * 1e3),
+    }
+
+
+def bench_model(arch_id: str, *, num_slots: int, n_requests: int,
+                prompt_lo: int, prompt_hi: int, out_lo: int, out_hi: int,
+                bucket: int, rates, smoke: bool, seed: int,
+                rounds: int = 2) -> dict:
+    bundle = model_zoo.build_arch(arch_id, smoke=smoke, dtype=jnp.float32)
+    # INT8-native weights — the serving format (PR 2)
+    params = step_lib.prepare_params(
+        bundle.init_params(jax.random.PRNGKey(0)), QGaLoreConfig(),
+        jnp.float32)
+    max_len = _bucket(prompt_hi + out_hi + 1, bucket)
+    reqs = make_requests(n_requests, prompt_lo=prompt_lo,
+                         prompt_hi=prompt_hi, out_lo=out_lo, out_hi=out_hi,
+                         vocab=bundle.cfg.vocab_size, seed=seed)
+
+    lock_run = make_lockstep_runner(
+        bundle, params, reqs, num_slots=num_slots, max_len=max_len,
+        bucket=bucket)
+    cont_run = make_continuous_runner(
+        bundle, params, reqs, num_slots=num_slots, max_len=max_len,
+        bucket=bucket)
+    lock_run(), cont_run()                   # compile
+    lock, cont = None, None
+    for _ in range(rounds):                  # interleaved: machine drift
+        lock = _best(lock, lock_run())       # hits both engines evenly
+        cont = _best(cont, cont_run())
+    lock_out, lock_wall, lock_lat = lock
+    cont_out, cont_wall, cont_lat, stats = cont
+
+    # token parity gate: the speedup must be apples-to-apples
+    for r in reqs:
+        assert cont_out[r.rid] == lock_out[r.rid], (
+            f"{arch_id} rid {r.rid}: continuous {cont_out[r.rid]} != "
+            f"lockstep {lock_out[r.rid]}")
+
+    result = {
+        "lockstep": _metrics(lock_out, lock_wall, lock_lat),
+        "continuous": {**_metrics(cont_out, cont_wall, cont_lat),
+                       "scheduler_stats": dict(stats)},
+        "token_parity": True,
+    }
+    result["speedup_x"] = (result["continuous"]["tokens_per_s"]
+                           / result["lockstep"]["tokens_per_s"])
+
+    # finite offered rates: latency under load (continuous engine)
+    result["rates"] = {}
+    for rate in rates:
+        arrivals = [i / rate for i in range(len(reqs))]
+        rate_run = make_continuous_runner(
+            bundle, params, reqs, num_slots=num_slots, max_len=max_len,
+            bucket=bucket, arrivals=arrivals)
+        rate_run()                           # compile
+        out_r, wall_r, lat_r, _ = rate_run()
+        result["rates"][f"{rate:g}_rps"] = _metrics(out_r, wall_r, lat_r)
+    return result
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default="llama_60m,llama_130m")
+    ap.add_argument("--num-slots", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--prompt-min", type=int, default=8)
+    ap.add_argument("--prompt-max", type=int, default=48)
+    ap.add_argument("--out-min", type=int, default=4)
+    ap.add_argument("--out-max", type=int, default=48)
+    ap.add_argument("--bucket", type=int, default=16)
+    ap.add_argument("--rates", default="8",
+                    help="comma-separated offered request rates (req/s)")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="interleaved timed rounds per engine (best-of)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shape-preserving configs (CI)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.num_slots = min(args.num_slots, 4)
+        args.requests = min(args.requests, 12)
+        args.prompt_min = min(args.prompt_min, 4)
+        args.prompt_max = min(args.prompt_max, 16)
+        args.out_min = min(args.out_min, 2)
+        args.out_max = min(args.out_max, 32)
+        args.bucket = min(args.bucket, 8)
+
+    rates = [float(r) for r in args.rates.split(",") if r.strip()]
+    report = {
+        "meta": {
+            "platform": dispatch.platform(),
+            "backend": dispatch.default_backend("quantized_dense"),
+            "num_slots": args.num_slots, "requests": args.requests,
+            "prompt_len": [args.prompt_min, args.prompt_max],
+            "out_len": [args.out_min, args.out_max],
+            "bucket": args.bucket, "rates_rps": rates,
+            "smoke": args.smoke, "seed": args.seed,
+        },
+        "results": {},
+    }
+    for name in args.models.split(","):
+        arch = MODELS[name.strip()]
+        r = bench_model(arch, num_slots=args.num_slots,
+                        n_requests=args.requests,
+                        prompt_lo=args.prompt_min, prompt_hi=args.prompt_max,
+                        out_lo=args.out_min, out_hi=args.out_max,
+                        bucket=args.bucket, rates=rates, smoke=args.smoke,
+                        seed=args.seed, rounds=args.rounds)
+        for mode in ("lockstep", "continuous"):
+            emit(f"serve_bench/{name}_{mode}_tokens_per_s",
+                 r[mode]["wall_s"] * 1e6,
+                 f"{r[mode]['tokens_per_s']:.1f} tok/s;"
+                 f"p50={r[mode]['p50_latency_ms']:.0f}ms;"
+                 f"p99={r[mode]['p99_latency_ms']:.0f}ms")
+        emit(f"serve_bench/{name}_continuous_speedup",
+             r["continuous"]["wall_s"] * 1e6, f"{r['speedup_x']:.2f}x")
+        report["results"][name] = r
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=2)
+    print(f"wrote {args.out}", flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -2,17 +2,49 @@
 greedy decode with stacked KV caches.
 
     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-2.7b
+
+``--continuous``: run the same work through the continuous-batching
+scheduler (ragged prompts, mixed output lengths, slot reuse) instead of
+one lockstep batch — see docs/serving.md.
 """
 import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import QGaLoreConfig
 from repro.models import model_zoo
 from repro.serve import engine
+from repro.serve.scheduler import Request, Scheduler
 from repro.train import step as step_lib
+
+
+def run_continuous(bundle, params, args):
+    rng = np.random.default_rng(42)
+    reqs = [Request(rid=r,
+                    tokens=rng.integers(
+                        1, bundle.cfg.vocab_size,
+                        size=int(rng.integers(
+                            4, args.prompt_len + 1))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(
+                        2, max(args.new_tokens, 3))))
+            for r in range(args.batch * 3)]
+    sched = Scheduler(
+        bundle, params, num_slots=args.batch,
+        max_len=args.prompt_len + args.new_tokens + 1,
+        temperature=args.temperature, dtype=jnp.float32)
+    t0 = time.monotonic()
+    comps = sched.run(reqs)
+    dt = time.monotonic() - t0
+    total = sum(len(c.tokens) for c in comps)
+    print(f"continuous: {len(reqs)} requests over {args.batch} slots, "
+          f"{total} tokens in {dt:.2f}s ({total / dt:.1f} tok/s incl. "
+          f"compile), stats={sched.stats}")
+    for c in comps[: 2]:
+        print(f"  request {c.rid}: {c.tokens[:12]} ... "
+              f"latency={c.latency * 1e3:.0f}ms")
 
 
 def main():
@@ -23,6 +55,9 @@ def main():
     ap.add_argument("--new-tokens", type=int, default=24)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--int8", action="store_true", default=True)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching scheduler instead of one "
+                         "lockstep batch")
     args = ap.parse_args()
 
     bundle = model_zoo.build_arch(args.arch, smoke=True, dtype=jnp.float32)
@@ -30,6 +65,10 @@ def main():
     if args.int8:
         params = step_lib.prepare_params(params, QGaLoreConfig(),
                                          jnp.float32)
+
+    if args.continuous:
+        run_continuous(bundle, params, args)
+        return
 
     key = jax.random.PRNGKey(42)
     batch = {"tokens": jax.random.randint(

@@ -60,6 +60,20 @@ def scan_layers(body, init, xs, *, reverse: bool = False, length=None):
                         length=length)
 
 
+def stack_to_batch_major(tree):
+    """(n, B, ...) leaves → (B, n, ...): models whose per-layer cache
+    nests an INNER block stack (xLSTM superblocks, Zamba mamba runs) use
+    this at the prefill/decode boundary so every cache leaf still leads
+    with the batch axis — the ``SegmentDef.cache_spec`` contract the
+    serving slot pool and shard rules rely on."""
+    return jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 0, 1), tree)
+
+
+def stack_to_layer_major(tree):
+    """Inverse of :func:`stack_to_batch_major` — back to scan layout."""
+    return jax.tree_util.tree_map(lambda a: jnp.moveaxis(a, 1, 0), tree)
+
+
 @dataclass(frozen=True)
 class SegmentDef:
     name: str
@@ -70,7 +84,13 @@ class SegmentDef:
     decode: Optional[Callable] = None
     # (layer_params, carry, ctx) -> (carry, cache_slice)   [prefill]
     prefill: Optional[Callable] = None
-    # (batch, max_len, dtype) -> per-layer cache spec pytree
+    # (batch, max_len, dtype) -> per-layer cache spec pytree.
+    # CONTRACT: every leaf leads with the batch axis (recurrent states
+    # included), so stacked caches are (n_layers, batch, ...). The serving
+    # runtime relies on this: the continuous-batching cache pool
+    # (repro.serve.scheduler) treats dim 1 as the SLOT axis — per-slot
+    # reset/insert is a dynamic_update_slice there — and the shard rules
+    # (repro.serve.shard) put that axis on the data mesh.
     cache_spec: Optional[Callable] = None
     # optional carry transformation applied before this segment's scan
     pre: Optional[Callable] = None          # (params, carry, ctx) -> carry
@@ -91,6 +111,12 @@ class ModelBundle:
     # names of carry entries that must persist across decode steps (e.g.
     # the encoder "memory") — captured at prefill, fed back at decode.
     decode_extras: Tuple[str, ...] = ()
+    # True ⇔ right-padded (ragged) prompt batches prefill exactly, given
+    # per-row lengths: causal attention never lets valid positions see the
+    # trailing pads. Recurrent families (SSM/xLSTM/Zamba) fold EVERY input
+    # position into their state, so they must keep this False — the
+    # serving scheduler then prefills each request unpadded.
+    ragged_prefill_ok: bool = False
 
     def seg_key(self, i: int) -> str:
         return f"seg{i}_{self.segments[i].name}"

@@ -265,6 +265,12 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
                 (B, cfg.num_prefix_embeddings, cfg.d_model), dtype)
         return spec
 
+    # Ragged (right-padded) prefill is exact only when rows can't interact:
+    # causal attention qualifies, but capacity-limited MoE routing couples
+    # rows through the shared expert buffers once T·k exceeds the drop-free
+    # threshold (pads of one row can evict valid tokens of another) — MoE
+    # bundles therefore keep the one-request-at-a-time unpadded admission.
     return ModelBundle(cfg=cfg, init_params=init_params, embed=embed,
                        segments=segments, head_loss=head_loss,
-                       head_logits=head_logits, input_specs=input_specs)
+                       head_logits=head_logits, input_specs=input_specs,
+                       ragged_prefill_ok=(mc is None))

@@ -17,7 +17,7 @@ from repro.models.layers import cross_entropy, dense, dense_init, \
 
 
 class XGroupCache(NamedTuple):
-    mlstm: Any                      # stacked MLSTMState (n_m, ...)
+    mlstm: Any          # stacked MLSTMState, BATCH-major leaves (B, n_m, …)
     slstm: xlstm.SLSTMState
 
 
@@ -51,11 +51,12 @@ def group_prefill(lp, carry, ctx, cfg: ModelConfig, *, dtype):
                                              return_cache=True)
         return out, state
 
-    from repro.models.base import scan_layers
+    from repro.models.base import scan_layers, stack_to_batch_major
     h, mstates = scan_layers(body, h, lp["mlstm"])
     h, sstate = xlstm.slstm_block_apply(lp["slstm"], h, cfg, dtype=dtype,
                                         return_cache=True)
-    return {**carry, "h": h}, XGroupCache(mstates, sstate)
+    return {**carry, "h": h}, \
+        XGroupCache(stack_to_batch_major(mstates), sstate)
 
 
 def group_decode(lp, carry, cache: XGroupCache, ctx, cfg: ModelConfig, *,
@@ -68,11 +69,14 @@ def group_decode(lp, carry, cache: XGroupCache, ctx, cfg: ModelConfig, *,
                                             dtype=dtype)
         return out, new
 
-    from repro.models.base import scan_layers
-    h, new_m = scan_layers(body, h, (lp["mlstm"], cache.mlstm))
+    from repro.models.base import scan_layers, stack_to_batch_major, \
+        stack_to_layer_major
+    h, new_m = scan_layers(
+        body, h, (lp["mlstm"], stack_to_layer_major(cache.mlstm)))
     h, new_s = xlstm.slstm_block_decode(lp["slstm"], h, cfg,
                                         cache=cache.slstm, dtype=dtype)
-    return {**carry, "h": h}, XGroupCache(new_m, new_s)
+    return {**carry, "h": h}, \
+        XGroupCache(stack_to_batch_major(new_m), new_s)
 
 
 def build(cfg: ModelConfig, *, q_chunk: int = 1024,
@@ -101,8 +105,10 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
 
     def cache_spec(batch, max_len, cdtype):
         mspec = xlstm.mlstm_cache_spec(cfg, batch)
+        # inner mlstm stack sits AFTER the batch axis (batch-major cache)
         mstack = jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct((n_m,) + s.shape, s.dtype), mspec)
+            lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0], n_m) + s.shape[1:], s.dtype), mspec)
         return XGroupCache(mstack, xlstm.slstm_cache_spec(cfg, batch))
 
     segments = (SegmentDef(

@@ -116,7 +116,7 @@ def superblock_apply(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
 
 
 class ZambaCache(NamedTuple):
-    mamba: Any          # stacked Mamba2Cache (n_mamba, ...)
+    mamba: Any          # stacked Mamba2Cache, BATCH-major (B, n_mamba, …)
     kv: Tuple[jax.Array, jax.Array]
 
 
@@ -130,9 +130,10 @@ def superblock_prefill(lp, carry, ctx, cfg: ModelConfig, *, dtype, q_chunk):
             return_cache=True)
         return hc + out, cache
 
-    from repro.models.base import scan_layers
+    from repro.models.base import scan_layers, stack_to_batch_major
     h, mcaches = scan_layers(mamba_body, h,
                              (lp["mamba_norms"], lp["mamba"]))
+    mcaches = stack_to_batch_major(mcaches)
     site, kv = _shared_site_apply(ctx["shared"], lp, h, carry["x0"],
                                   ctx["positions"], cfg, dtype, q_chunk)
     # pad kv caches to max_len
@@ -155,9 +156,12 @@ def superblock_decode(lp, carry, cache: ZambaCache, ctx,
             dtype=dtype)
         return hc + out, new_cache
 
-    from repro.models.base import scan_layers
+    from repro.models.base import scan_layers, stack_to_batch_major, \
+        stack_to_layer_major
     h, new_mcaches = scan_layers(
-        mamba_body, h, (lp["mamba_norms"], lp["mamba"], cache.mamba))
+        mamba_body, h, (lp["mamba_norms"], lp["mamba"],
+                        stack_to_layer_major(cache.mamba)))
+    new_mcaches = stack_to_batch_major(new_mcaches)
 
     # shared attention site, decode form
     shared = ctx["shared"]
@@ -223,9 +227,10 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
 
     def cache_spec(batch, max_len, cdtype):
         mspec = ssm.mamba2_cache_spec(cfg, batch, cdtype)
+        # inner mamba stack sits AFTER the batch axis (batch-major cache)
         mstack = jax.tree_util.tree_map(
-            lambda s: jax.ShapeDtypeStruct((n_mamba_per,) + s.shape,
-                                           s.dtype), mspec)
+            lambda s: jax.ShapeDtypeStruct(
+                (s.shape[0], n_mamba_per) + s.shape[1:], s.dtype), mspec)
         KH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
         kv = (jax.ShapeDtypeStruct((batch, max_len, KH, hd), cdtype),
               jax.ShapeDtypeStruct((batch, max_len, KH, hd), cdtype))

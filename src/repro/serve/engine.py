@@ -11,6 +11,12 @@ scan body is gone.
 ``DecodeState`` is a pure pytree → the decode step jits/pjits cleanly; cache
 sharding (see ``repro.serve.shard``) puts the KV time axis on the model mesh
 axis for long contexts (context-parallel decode) and batch on data.
+
+Per-row ``lengths`` drive every positional effect (RoPE, cache write slot,
+attention mask), so one compiled decode step serves heterogeneous in-flight
+sequences — the substrate for both the lockstep ``generate`` host loop and
+the continuous-batching scheduler (``repro.serve.scheduler``, see
+``docs/serving.md``).
 """
 from __future__ import annotations
 
@@ -29,8 +35,43 @@ class DecodeState(NamedTuple):
     extras: Dict[str, Any]          # persistent carry entries (e.g. memory)
 
 
-def build_prefill(bundle: ModelBundle, max_len: int):
-    """Returns prefill(params, batch) -> (last_logits, DecodeState)."""
+def prompt_lengths(tokens, pad_id: Optional[int]) -> jax.Array:
+    """Per-row valid prompt length of a right-padded (B, S) token batch:
+    S minus the trailing run of ``pad_id`` (pad ids *inside* the prompt are
+    treated as content)."""
+    B, S = tokens.shape
+    if pad_id is None:
+        return jnp.full((B,), S, jnp.int32)
+    trailing = jnp.cumprod(
+        (tokens[:, ::-1] == pad_id).astype(jnp.int32), axis=1).sum(axis=1)
+    return (S - trailing).astype(jnp.int32)
+
+
+def build_prefill(bundle: ModelBundle, max_len: int,
+                  pad_id: Optional[int] = None):
+    """Returns prefill(params, batch) -> (last_logits, DecodeState).
+
+    Ragged (right-padded) prompts: per-row valid lengths come from
+    ``batch["lengths"]`` when present, else from the trailing-``pad_id``
+    run (``pad_id=None`` ⇒ every row is full). The returned logits are
+    taken at each row's LAST VALID position, and ``DecodeState.lengths``
+    records the per-row length — so the first decode step writes its KV at
+    the right cache slot and RoPE continues from the true position. Padded
+    positions never influence valid ones under causal attention (they sit
+    strictly to the right), and the garbage K/V they leave in the cache
+    beyond ``lengths`` is masked out by decode (``pos < length``) until
+    overwritten. Bundles that can't guarantee this row independence
+    (recurrent families fold every position into their state; MoE routing
+    couples rows through capacity-limited expert buffers) declare
+    ``ragged_prefill_ok=False`` and reject ``pad_id`` here — send them
+    unpadded prompts (full-length ``batch["lengths"]`` stays legal).
+    """
+    if pad_id is not None and not bundle.ragged_prefill_ok:
+        raise ValueError(
+            f"{bundle.cfg.name}: ragged (right-padded) prefill is not "
+            "exact for this architecture (ragged_prefill_ok=False) — "
+            "prefill unpadded prompts instead of passing pad_id")
+
     def prefill(params, batch):
         carry, ctx = bundle.embed(params, batch)
         ctx = {**ctx, "max_len": max_len}
@@ -50,10 +91,19 @@ def build_prefill(bundle: ModelBundle, max_len: int):
                 from repro.models.base import scan_layers
                 carry, cache = scan_layers(body, carry, params[key])
                 caches[key] = cache
-        logits = bundle.head_logits(params, carry)
-        B = logits.shape[0]
         prompt_len = batch["tokens"].shape[1]
-        lengths = jnp.full((B,), prompt_len, jnp.int32)
+        if "lengths" in batch:
+            lengths = batch["lengths"].astype(jnp.int32)
+        else:
+            lengths = prompt_lengths(batch["tokens"], pad_id)
+        # head logits at each row's last valid position (h may carry a
+        # non-token prefix, e.g. VLM patch embeddings → offset).
+        h = carry["h"]
+        offset = h.shape[1] - prompt_len
+        idx = (lengths - 1 + offset)[:, None, None]
+        h_last = jnp.take_along_axis(h, jnp.broadcast_to(
+            idx, (h.shape[0], 1, h.shape[2])), axis=1)
+        logits = bundle.head_logits(params, {**carry, "h": h_last})
         extras = {k: carry[k] for k in bundle.decode_extras}
         return logits, DecodeState(caches, lengths, extras)
 
@@ -99,19 +149,40 @@ def sample(logits, key, temperature: float = 0.0):
 
 
 def generate(bundle: ModelBundle, params, batch, *, steps: int,
-             max_len: int, temperature: float = 0.0, key=None):
-    """Prefill + `steps` greedy/temperature decode steps (host loop)."""
+             max_len: int, temperature: float = 0.0, key=None,
+             eos_id: Optional[int] = None, pad_id: Optional[int] = None):
+    """Prefill + `steps` greedy/temperature decode steps (host loop).
+
+    ``eos_id``: rows that emit it are RETIRED — they stop sampling (all
+    later emissions are ``pad_id``, default 0) and their cache length
+    freezes, so ``state.lengths`` reports prompt + true generated length.
+    The lockstep batch still runs every row to ``steps`` (static shapes);
+    continuous batching (``repro.serve.scheduler``) reclaims those slots
+    instead.
+
+    Ragged prompts: pass per-row ``batch["lengths"]`` (or ``pad_id`` for
+    trailing-pad detection) — see :func:`build_prefill`.
+    """
     key = key if key is not None else jax.random.PRNGKey(0)
-    prefill = jax.jit(build_prefill(bundle, max_len))
+    prefill = jax.jit(build_prefill(bundle, max_len, pad_id=pad_id))
     decode = jax.jit(build_decode(bundle))
     logits, state = prefill(params, batch)
+    pad = 0 if pad_id is None else pad_id
     toks = []
     tok = sample(logits, key, temperature)
+    done = jnp.zeros(tok.shape, bool)
     for s in range(steps):
         toks.append(tok)
+        prev_lengths = state.lengths
         logits, state = decode(params, state, tok[:, None])
         key = jax.random.fold_in(key, s)
-        tok = sample(logits, key, temperature)
+        next_tok = sample(logits, key, temperature)
+        if eos_id is not None:
+            done = done | (tok == eos_id)
+            next_tok = jnp.where(done, pad, next_tok)
+            state = state._replace(
+                lengths=jnp.where(done, prev_lengths, state.lengths))
+        tok = next_tok
     toks.append(tok)
     return jnp.stack(toks, axis=1), state   # (B, steps+1)
 

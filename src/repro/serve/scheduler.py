@@ -1,0 +1,401 @@
+"""Continuous-batching serving runtime: slot scheduler + KV-cache pool.
+
+The lockstep host loop (``engine.generate``) decodes one fixed batch to
+completion — every row pays for the slowest row's output length, and new
+requests wait for the whole batch to drain. This module replaces it with
+the standard continuous-batching design:
+
+* a **KV-cache pool**: one ``DecodeState`` whose batch axis is a fixed set
+  of ``num_slots`` *slots* (cache leaves are ``(L, num_slots, max_len, …)``
+  — the stacked-layer axis leads, the slot axis is dim 1, exactly the
+  layout ``SegmentDef.cache_spec`` promises and ``repro.serve.shard`` puts
+  on the data mesh axis);
+* :func:`insert_request` — a **jit-stable** per-slot reset/insert: every
+  leaf of a single-row prefill ``DecodeState`` is ``dynamic_update_slice``d
+  into the pool at a *traced* slot index, so admitting into slot 0 and slot
+  37 is the same compiled program (no per-slot recompiles);
+* a host-side :class:`Scheduler` that admits pending requests into free
+  slots mid-flight (prefill-into-slot), runs ONE batched decode step over
+  the heterogeneous in-flight sequences (per-slot ``lengths`` drive both
+  attention masking and cache writes — see ``engine.build_decode``), and
+  retires slots on EOS / max-tokens, freeing them for the next admission.
+
+Per-slot decode results are row-independent (attention/FFN reduce within a
+row; MoE decode runs drop-free), so continuous batching is **token-identical**
+to the lockstep baseline under greedy sampling — verified by
+``tests/test_scheduler.py`` and benchmarked by ``benchmarks/serve_bench.py``
+(``BENCH_serve.json``).
+
+INT8-native weights (PR 2) are consumed as-is: both the per-request prefill
+and the batched decode step stream QTensor blocks through
+``quantized_dense`` — admission does not materialize weights either.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Deque, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelBundle
+from repro.serve import engine
+from repro.serve.engine import DecodeState
+
+
+# ---------------------------------------------------------------------------
+# Requests / completions
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Request:
+    """One generation request: ``tokens`` is the unpadded prompt."""
+    rid: int
+    tokens: Sequence[int]
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+@dataclass
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: List[int]                 # generated tokens (eos included)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_finish: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_finish - self.t_submit
+
+
+@dataclass
+class _Slot:
+    rid: int = -1
+    remaining: int = 0
+    eos_id: Optional[int] = None
+    completion: Optional[Completion] = None
+    free: bool = True
+
+
+# ---------------------------------------------------------------------------
+# KV-cache pool
+# ---------------------------------------------------------------------------
+
+def init_pool(bundle: ModelBundle, num_slots: int, max_len: int,
+              dtype=jnp.bfloat16) -> DecodeState:
+    """Concrete zero-filled slot pool matching ``abstract_decode_state``."""
+    abs_state = engine.abstract_decode_state(bundle, num_slots, max_len,
+                                             dtype)
+    zeros = lambda s: jnp.zeros(s.shape, s.dtype)
+    return DecodeState(
+        caches=jax.tree_util.tree_map(zeros, abs_state.caches),
+        lengths=jnp.zeros((num_slots,), jnp.int32),
+        extras=jax.tree_util.tree_map(zeros, abs_state.extras),
+    )
+
+
+def insert_request(pool: DecodeState, slot, row: DecodeState) -> DecodeState:
+    """Insert a single-row prefill state into pool slot ``slot``.
+
+    jit-stable: ``slot`` is a traced scalar; every leaf updates via
+    ``dynamic_update_slice`` (cache leaves at batch dim 1 — dim 0 is the
+    stacked layer axis; ``lengths``/extras at dim 0). One compiled program
+    serves every slot."""
+    slot = jnp.asarray(slot, jnp.int32)
+
+    def ins(batch_dim, pool_leaf, row_leaf):
+        starts = [jnp.zeros((), jnp.int32)] * pool_leaf.ndim
+        starts[batch_dim] = slot
+        return jax.lax.dynamic_update_slice(
+            pool_leaf, row_leaf.astype(pool_leaf.dtype), starts)
+
+    caches = jax.tree_util.tree_map(
+        lambda p, r: ins(1, p, r), pool.caches, row.caches)
+    lengths = jax.lax.dynamic_update_slice(
+        pool.lengths, row.lengths.astype(pool.lengths.dtype), (slot,))
+    extras = jax.tree_util.tree_map(
+        lambda p, r: ins(0, p, r), pool.extras, row.extras)
+    return DecodeState(caches, lengths, extras)
+
+
+def insert_requests(pool: DecodeState, slots, rows: DecodeState
+                    ) -> DecodeState:
+    """Batched :func:`insert_request`: ``rows`` is a B-row prefill state,
+    ``slots`` a (B,) slot-index vector — one scatter per pool leaf admits
+    the whole group (the common case right after startup or a burst of
+    retirements). Compiles once per group size B; slot VALUES stay traced."""
+    slots = jnp.asarray(slots, jnp.int32)
+    caches = jax.tree_util.tree_map(
+        lambda p, r: p.at[:, slots].set(r.astype(p.dtype),
+                                        unique_indices=True),
+        pool.caches, rows.caches)
+    lengths = pool.lengths.at[slots].set(
+        rows.lengths.astype(pool.lengths.dtype), unique_indices=True)
+    extras = jax.tree_util.tree_map(
+        lambda p, r: p.at[slots].set(r.astype(p.dtype),
+                                     unique_indices=True),
+        pool.extras, rows.extras)
+    return DecodeState(caches, lengths, extras)
+
+
+def build_decode_step(bundle: ModelBundle, temperature: float = 0.0,
+                      pad_id: int = 0):
+    """One batched continuous-decode step over the slot pool.
+
+    ``active`` (B,) masks retired/free slots: their ``lengths`` do not
+    advance (the cache write lands on a dead slot's scratch position and is
+    overwritten at the next admission) and their sampled token is ``pad_id``.
+    Active slots decode exactly as in the lockstep path — per-row ``lengths``
+    select the RoPE position, the cache write slot, and the attention mask.
+    """
+    decode = engine.build_decode(bundle)
+
+    def step(params, pool: DecodeState, tokens, active, key):
+        logits, new = decode(params, pool, tokens[:, None])
+        lengths = jnp.where(active, new.lengths, pool.lengths)
+        toks = engine.sample(logits, key, temperature)
+        toks = jnp.where(active, toks, pad_id)
+        return toks, DecodeState(new.caches, lengths, new.extras)
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Scheduler
+# ---------------------------------------------------------------------------
+
+def _bucket(n: int, bucket: int) -> int:
+    return max(bucket, -(-n // bucket) * bucket)
+
+
+class Scheduler:
+    """Slot-based continuous-batching scheduler over a model bundle.
+
+    Host-side control (admit / retire / token bookkeeping) around three
+    jitted programs: group prefill (pending requests batched, padded to a
+    ``prompt_bucket`` multiple → bounded compile count), jit-stable
+    :func:`insert_requests` (traced slot indices), and the batched masked
+    decode step.
+
+    Restricted to bundles without ``decode_extras`` (enc-dec carries a
+    per-request encoder memory whose admission contract is not slot-shaped
+    yet). Recurrent-state families work — their cache leaves are simply
+    stateful ``(L, B, …)`` tensors with no time axis — but they fold every
+    input position into their state (``bundle.ragged_prefill_ok=False``),
+    so the scheduler admits them ONE request at a time with an
+    exact-length (unpadded, unbucketed) prefill; batched right-padded
+    group admission is reserved for ragged-safe (causal-attention)
+    bundles.
+
+    ``shardings``: optional ``DecodeState`` of ``NamedSharding``s for the
+    pool (see ``repro.serve.shard.pool_sharding``) — keeps the slot axis on
+    the data mesh axis across inserts and decode steps.
+    """
+
+    def __init__(self, bundle: ModelBundle, params, *, num_slots: int,
+                 max_len: int, pad_id: int = 0, temperature: float = 0.0,
+                 prompt_bucket: int = 16, dtype=None, key=None,
+                 shardings: Optional[DecodeState] = None):
+        if bundle.decode_extras:
+            raise NotImplementedError(
+                "continuous batching requires slot-shaped decode state; "
+                f"bundle carries decode_extras={bundle.decode_extras!r}")
+        self.bundle = bundle
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self.prompt_bucket = prompt_bucket
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        dtype = dtype if dtype is not None else jnp.bfloat16
+
+        self._prefill = jax.jit(
+            engine.build_prefill(bundle, max_len, pad_id=None))
+        insert_kw: Dict[str, Any] = {}
+        if shardings is not None:
+            insert_kw["out_shardings"] = shardings
+        self._insert = jax.jit(insert_requests, **insert_kw)
+        self._step = jax.jit(build_decode_step(bundle, temperature, pad_id))
+
+        self.pool = init_pool(bundle, num_slots, max_len, dtype)
+        if shardings is not None:
+            self.pool = jax.device_put(self.pool, shardings)
+        self.slots = [_Slot() for _ in range(num_slots)]
+        self.cur_tokens = np.zeros((num_slots,), np.int32)
+        self.active = np.zeros((num_slots,), bool)
+        self.pending: Deque[Request] = deque()
+        self._submit_t: Dict[int, float] = {}
+        self.completed: List[Completion] = []
+        self.t = 0   # global decode-step counter (sampling key schedule)
+        self.stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
+                      "prefills": 0, "evictions": 0}
+
+    def reset(self) -> None:
+        """Clear all serving state but keep the compiled programs — a fresh
+        pool without paying prefill/decode retrace (benchmark warm runs)."""
+        self.pool = jax.tree_util.tree_map(jnp.zeros_like, self.pool)
+        self.slots = [_Slot() for _ in range(self.num_slots)]
+        self.cur_tokens = np.zeros((self.num_slots,), np.int32)
+        self.active = np.zeros((self.num_slots,), bool)
+        self.pending.clear()
+        self._submit_t.clear()
+        self.completed = []
+        self.t = 0
+        self.stats = {k: 0 for k in self.stats}
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue a request; rejects it up front (nothing else is lost)
+        when it cannot fit the cache window."""
+        L = len(req.tokens)
+        if L + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {L} + max_new "
+                f"{req.max_new_tokens} exceeds max_len {self.max_len}")
+        self._submit_t[req.rid] = time.monotonic()
+        self.pending.append(req)
+
+    # -- admission ---------------------------------------------------------
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.free]
+
+    def _admit_group(self, slot_ids: List[int],
+                     group: List[Request]) -> None:
+        """Prefill a group of requests as ONE ragged (right-padded) batch
+        and scatter-insert every row into its slot mid-flight. Per-row
+        ``lengths`` keep padded rows exact (see ``engine.build_prefill``),
+        so a B-row group admission emits the same first tokens as B
+        single-row prefills."""
+        B = len(group)
+        lens = [len(req.tokens) for req in group]
+        if self.bundle.ragged_prefill_ok:
+            Lp = min(_bucket(max(lens), self.prompt_bucket), self.max_len)
+        else:
+            # recurrent state folds pads in — exact-length, one at a time
+            assert B == 1, "padded group admission needs ragged_prefill_ok"
+            Lp = lens[0]
+        padded = np.full((B, Lp), self.pad_id, np.int32)
+        for i, req in enumerate(group):
+            padded[i, : lens[i]] = np.asarray(req.tokens, np.int32)
+        batch = {"tokens": jnp.asarray(padded),
+                 "lengths": jnp.asarray(lens, jnp.int32)}
+        logits, rows = self._prefill(self.params, batch)
+        self.stats["prefills"] += 1
+        self.pool = self._insert(self.pool,
+                                 np.asarray(slot_ids, np.int32), rows)
+
+        # admission keys live in a disjoint range from the per-step keys
+        # (fold_in data is uint32)
+        key = jax.random.fold_in(self._key,
+                                 2 ** 31 + self.stats["admitted"])
+        toks = np.asarray(engine.sample(logits, key, self.temperature))
+        now = time.monotonic()
+        for i, (slot_id, req) in enumerate(zip(slot_ids, group)):
+            tok = int(toks[i])
+            comp = Completion(rid=req.rid, prompt_len=lens[i],
+                              tokens=[tok],
+                              t_submit=self._submit_t.pop(req.rid, now),
+                              t_admit=now)
+            self.stats["admitted"] += 1
+            if self._finished(tok, 1, req):
+                # done at the first token: the slot was filled but never
+                # activates — it stays free for the next admission
+                comp.t_finish = time.monotonic()
+                self.completed.append(comp)
+                self.stats["retired"] += 1
+                continue
+            slot = self.slots[slot_id]
+            slot.rid, slot.free = req.rid, False
+            slot.remaining = req.max_new_tokens - 1
+            slot.eos_id = req.eos_id
+            slot.completion = comp
+            self.cur_tokens[slot_id] = tok
+            self.active[slot_id] = True
+
+    @staticmethod
+    def _finished(tok: int, n_emitted: int, req: Request) -> bool:
+        return n_emitted >= req.max_new_tokens or \
+            (req.eos_id is not None and tok == req.eos_id)
+
+    def _retire(self, slot_id: int) -> None:
+        """Evict a finished sequence: record its completion and free the
+        slot for the next admission (the pool row is reset on insert)."""
+        slot = self.slots[slot_id]
+        slot.completion.t_finish = time.monotonic()
+        self.completed.append(slot.completion)
+        slot.free, slot.rid, slot.completion = True, -1, None
+        self.active[slot_id] = False
+        self.cur_tokens[slot_id] = self.pad_id
+        self.stats["retired"] += 1
+        self.stats["evictions"] += 1
+
+    # -- the serving loop --------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit pending requests into free slots, then run one batched
+        decode step. Returns False when idle (nothing active or pending)."""
+        free = self._free_slots()
+        while free and self.pending:
+            n = min(len(free), len(self.pending)) \
+                if self.bundle.ragged_prefill_ok else 1
+            self._admit_group(free[:n],
+                              [self.pending.popleft() for _ in range(n)])
+            free = free[n:]
+
+        if not self.active.any():
+            return bool(self.pending)
+
+        key = jax.random.fold_in(self._key, self.t)
+        toks, self.pool = self._step(
+            self.params, self.pool, jnp.asarray(self.cur_tokens),
+            jnp.asarray(self.active), key)
+        self.t += 1
+        self.stats["decode_steps"] += 1
+
+        toks = np.asarray(toks)
+        for i, slot in enumerate(self.slots):
+            if slot.free:
+                continue
+            tok = int(toks[i])
+            slot.completion.tokens.append(tok)
+            slot.remaining -= 1
+            if slot.remaining <= 0 or \
+                    (slot.eos_id is not None and tok == slot.eos_id):
+                self._retire(i)
+            else:
+                self.cur_tokens[i] = tok
+        return True
+
+    def run(self, requests: Sequence[Request] = (),
+            arrivals: Optional[Sequence[float]] = None
+            ) -> List[Completion]:
+        """Drive to completion. ``arrivals``: optional per-request offsets
+        (seconds from start) modelling an offered request rate — requests
+        are withheld from the pending queue until their arrival time."""
+        if arrivals is None:
+            for r in requests:
+                self.submit(r)
+            waiting: List[tuple] = []
+        else:
+            order = np.argsort(np.asarray(arrivals, float), kind="stable")
+            waiting = [(float(arrivals[i]), requests[i]) for i in order]
+        t0 = time.monotonic()
+        while True:
+            now = time.monotonic() - t0
+            while waiting and waiting[0][0] <= now:
+                _, r = waiting.pop(0)
+                self.submit(r)
+            busy = self.step()
+            if not busy and not waiting:
+                break
+            if not busy and waiting:
+                time.sleep(min(0.001, max(0.0, waiting[0][0] - now)))
+        return self.completed

@@ -52,3 +52,25 @@ def decode_state_sharding(state_abs: DecodeState, mesh: Mesh) -> DecodeState:
         lengths=NamedSharding(mesh, P()),
         extras=extras,
     )
+
+
+def pool_sharding(bundle, num_slots: int, max_len: int, mesh: Mesh,
+                  dtype=None) -> DecodeState:
+    """Shardings for the continuous-batching KV-cache pool
+    (``repro.serve.scheduler``): the SLOT axis is just the batch axis of a
+    ``DecodeState`` (dim 1 of every cache leaf, after the stacked-layer
+    axis — the ``SegmentDef.cache_spec`` contract), so the standard decode
+    rules apply — slots shard over the data mesh axes, the largest
+    remaining dim (KV time for attention caches) over model. ``lengths``
+    stays replicated: the host scheduler reads it for admission control.
+
+    Feed the result to ``Scheduler(..., shardings=...)``; inserts and
+    decode steps then keep every pool buffer on the data axis (a slot
+    admission touches only the shards owning that slot)."""
+    import jax.numpy as jnp
+
+    from repro.serve import engine
+    dtype = dtype if dtype is not None else jnp.bfloat16
+    abs_state = engine.abstract_decode_state(bundle, num_slots, max_len,
+                                             dtype)
+    return decode_state_sharding(abs_state, mesh)

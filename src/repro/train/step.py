@@ -253,7 +253,8 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
                 gspecs.append(P())
         grads_specs = jax.tree_util.tree_unflatten(gtreedef, gspecs)
 
-        return jax.shard_map(
+        from repro.compat import shard_map
+        return shard_map(
             inner, mesh=mesh, axis_names=set(dp_axes),
             in_specs=(_manual_specs(params), _manual_specs(proj_trees),
                       batch_specs),

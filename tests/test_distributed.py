@@ -170,6 +170,46 @@ def test_sharded_decode_runs():
     assert "OK sharded decode" in out
 
 
+def test_sharded_cache_pool_continuous_decode():
+    """Continuous batching on a real mesh: the slot pool sharded via
+    pool_sharding (slot axis on data, KV time on model) must produce the
+    same tokens as the unsharded scheduler."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.models import model_zoo
+        from repro.serve import shard as sshard
+        from repro.serve.scheduler import Request, Scheduler
+
+        bundle = model_zoo.build_arch("llama-60m", smoke=True,
+                                      dtype=jnp.float32)
+        params = bundle.init_params(jax.random.PRNGKey(0))
+        V = bundle.cfg.vocab_size
+        rng = np.random.default_rng(0)
+        reqs = [Request(rid=r,
+                        tokens=rng.integers(1, V, size=int(
+                            rng.integers(3, 10))).astype(np.int32),
+                        max_new_tokens=int(rng.integers(2, 6)))
+                for r in range(6)]
+
+        mesh = jax.make_mesh((2, 2), ("data", "model"),
+                             devices=jax.devices()[:4])
+        sh = sshard.pool_sharding(bundle, num_slots=4, max_len=32,
+                                  mesh=mesh, dtype=jnp.float32)
+        with mesh:
+            sched = Scheduler(bundle, params, num_slots=4, max_len=32,
+                              dtype=jnp.float32, prompt_bucket=8,
+                              shardings=sh)
+            comps = {c.rid: c.tokens for c in sched.run(list(reqs))}
+
+        plain = Scheduler(bundle, params, num_slots=4, max_len=32,
+                          dtype=jnp.float32, prompt_bucket=8)
+        ref = {c.rid: c.tokens for c in plain.run(list(reqs))}
+        assert comps == ref, (comps, ref)
+        print("OK sharded pool", sched.stats)
+    """)
+    assert "OK sharded pool" in out
+
+
 @pytest.mark.slow
 def test_dryrun_entry_small():
     """The dryrun module itself (512 devices) on the smallest arch/cell."""

@@ -26,20 +26,12 @@ def test_moe_ep_matches_plain():
 
         mesh = jax.make_mesh((4, 2), ("data", "model"))
 
-        def inner(p, xb):
-            out, aux = moe_lib.moe_apply_ep(p, xb, cfg, ep_axis="data",
-                                            dtype=jnp.float32)
-            return out, jax.lax.pmean(aux, "data")
-
-        # expert weights sharded on E over data; router/shared replicated
-        pspecs = {k: (P("data") if k.startswith("experts_") else P())
-                  for k in params if k != "shared"}
-        pspecs["shared"] = P()
-        f = jax.shard_map(inner, mesh=mesh, axis_names={"data"},
-                          in_specs=(pspecs, P("data")),
-                          out_specs=(P("data"), P()),
-                          check_vma=False)
-        got, aux_got = jax.jit(f)(params, x)
+        # expert weights sharded on E over data; router/shared replicated —
+        # moe_ep_sharded builds the shard_map through the repro.compat shim
+        # (old jax.experimental.shard_map vs new jax.shard_map).
+        got, aux_got = jax.jit(functools.partial(
+            moe_lib.moe_ep_sharded, cfg=cfg, mesh=mesh, ep_axis="data",
+            dtype=jnp.float32))(params, x)
         err = np.abs(np.asarray(got) - np.asarray(ref)).max()
         scale = max(np.abs(np.asarray(ref)).max(), 1e-3)
         assert err / scale < 2e-3, err / scale

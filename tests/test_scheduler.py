@@ -1,0 +1,305 @@
+"""Continuous-batching serving runtime: ragged-prompt parity, cache-pool
+insert, scheduler admit/evict lifecycle, and end-to-end token parity with
+the lockstep baseline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QGaLoreConfig
+from repro.models import model_zoo
+from repro.serve import engine
+from repro.serve.scheduler import Request, Scheduler, init_pool, \
+    insert_request, insert_requests
+from repro.train import step as step_lib
+
+PAD = 0
+
+
+@pytest.fixture(scope="module")
+def bundle60():
+    return model_zoo.build_arch("llama-60m", smoke=True, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def params60(bundle60):
+    return bundle60.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def qparams60(bundle60, params60):
+    """INT8-quantized weights — the serving-native format."""
+    return step_lib.prepare_params(params60, QGaLoreConfig(), jnp.float32)
+
+
+def _rand_prompt(rng, vocab, lo=3, hi=12):
+    return rng.integers(1, vocab, size=int(rng.integers(lo, hi))) \
+        .astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Ragged-prompt decode (the build_prefill lengths bugfix)
+# ---------------------------------------------------------------------------
+
+def test_ragged_prefill_matches_single_row_quantized(bundle60, qparams60):
+    """A right-padded batch row must produce the SAME prefill logits and
+    decode trajectory as the same prompt run unpadded on its own —
+    on the quantized (INT8-native) weight path."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(0)
+    lengths = [12, 7, 4]
+    S = max(lengths)
+    tokens = np.full((3, S), PAD, np.int32)
+    rows = [_rand_prompt(rng, V, L, L + 1) for L in lengths]
+    for i, r in enumerate(rows):
+        tokens[i, : len(r)] = r
+
+    prefill = jax.jit(engine.build_prefill(bundle60, max_len=24,
+                                           pad_id=PAD))
+    decode = jax.jit(engine.build_decode(bundle60))
+    logits, state = prefill(qparams60, {"tokens": jnp.asarray(tokens)})
+    assert np.asarray(state.lengths).tolist() == lengths
+
+    cont = rng.integers(1, V, size=(3, 3)).astype(np.int32)
+    lb, sb = logits, state
+    for t in range(3):
+        lb, sb = decode(qparams60, sb, jnp.asarray(cont[:, t: t + 1]))
+
+    for i, r in enumerate(rows):
+        lr, sr = prefill(qparams60, {"tokens": jnp.asarray(r)[None]})
+        err = np.abs(np.asarray(lr[0, -1]) - np.asarray(logits[i, -1]))
+        assert err.max() == 0.0, f"row {i} prefill mismatch {err.max()}"
+        for t in range(3):
+            lr, sr = decode(qparams60, sr,
+                            jnp.asarray(cont[i: i + 1, t: t + 1]))
+        err = np.abs(np.asarray(lr[0, -1]) - np.asarray(lb[i, -1]))
+        assert err.max() == 0.0, f"row {i} decode mismatch {err.max()}"
+
+
+def test_prompt_lengths_trailing_pad_only():
+    toks = jnp.asarray([[5, 0, 3, 0, 0],     # pad INSIDE prompt is content
+                        [1, 2, 3, 4, 5],
+                        [7, 0, 0, 0, 0]], jnp.int32)
+    assert engine.prompt_lengths(toks, 0).tolist() == [3, 5, 1]
+    assert engine.prompt_lengths(toks, None).tolist() == [5, 5, 5]
+
+
+# ---------------------------------------------------------------------------
+# generate(): EOS retirement (the host-loop bugfix)
+# ---------------------------------------------------------------------------
+
+def test_generate_eos_stops_sampling(bundle60, params60):
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(1)
+    prompt = _rand_prompt(rng, V, 6, 7)
+    batch = {"tokens": jnp.asarray(prompt)[None]}
+    ref, _ = engine.generate(bundle60, params60, batch, steps=6,
+                             max_len=32)
+    ref = np.asarray(ref)[0]
+    eos = int(ref[2])
+
+    toks, state = engine.generate(bundle60, params60, batch, steps=6,
+                                  max_len=32, eos_id=eos, pad_id=PAD)
+    toks = np.asarray(toks)[0]
+    assert toks[:3].tolist() == ref[:3].tolist()
+    assert (toks[3:] == PAD).all(), f"retired row kept sampling: {toks}"
+    # cache length froze at retirement: prompt + 2 decode writes
+    assert int(state.lengths[0]) == len(prompt) + 2
+
+
+# ---------------------------------------------------------------------------
+# Cache pool insert
+# ---------------------------------------------------------------------------
+
+def test_insert_request_slot_isolation(bundle60, params60):
+    """Inserting into slot j overwrites exactly slot j — one compiled
+    program serves every slot index (traced slot)."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(2)
+    prefill = jax.jit(engine.build_prefill(bundle60, max_len=16))
+    pool = init_pool(bundle60, 3, 16, jnp.float32)
+    ins = jax.jit(insert_request)
+
+    rows = []
+    for i in range(3):
+        _, row = prefill(params60,
+                         {"tokens": jnp.asarray(
+                             _rand_prompt(rng, V, 5, 6))[None]})
+        rows.append(row)
+
+    # fill slots 2, 0 (out of order) with one jitted program
+    pool = ins(pool, 2, rows[0])
+    pool = ins(pool, 0, rows[1])
+
+    def leaf_rows(state, i):
+        return [np.asarray(l)[:, i]
+                for l in jax.tree_util.tree_leaves(state.caches)]
+
+    for got, want in zip(leaf_rows(pool, 2), leaf_rows(rows[0], 0)):
+        np.testing.assert_array_equal(got, want)
+    for got, want in zip(leaf_rows(pool, 0), leaf_rows(rows[1], 0)):
+        np.testing.assert_array_equal(got, want)
+    for leaf in leaf_rows(pool, 1):          # untouched slot stays zero
+        assert (leaf == 0).all()
+    assert np.asarray(pool.lengths).tolist() == [5, 0, 5]
+
+    # batched scatter insert agrees with two single inserts
+    pool2 = insert_requests(init_pool(bundle60, 3, 16, jnp.float32),
+                            np.asarray([2, 0], np.int32),
+                            jax.tree_util.tree_map(
+                                lambda a, b: jnp.concatenate(
+                                    [a, b], axis=1 if a.ndim > 1 else 0),
+                                rows[0], rows[1]))
+    for a, b in zip(jax.tree_util.tree_leaves(pool),
+                    jax.tree_util.tree_leaves(pool2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Scheduler lifecycle
+# ---------------------------------------------------------------------------
+
+def test_scheduler_admit_evict(bundle60, params60):
+    """More requests than slots: every request completes, slots are
+    reused, and per-request token counts respect max_new_tokens."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=r, tokens=_rand_prompt(rng, V),
+                    max_new_tokens=int(rng.integers(1, 7)))
+            for r in range(7)]
+    sched = Scheduler(bundle60, params60, num_slots=2, max_len=32,
+                      dtype=jnp.float32, prompt_bucket=8)
+    comps = sched.run(reqs)
+
+    assert sorted(c.rid for c in comps) == list(range(7))
+    assert sched.stats["admitted"] == 7
+    assert sched.stats["retired"] == 7
+    assert sched.stats["evictions"] >= 5      # 7 requests through 2 slots
+    assert all(s.free for s in sched.slots)
+    assert not sched.active.any()
+    by_rid = {c.rid: c for c in comps}
+    for r in reqs:
+        assert len(by_rid[r.rid].tokens) == r.max_new_tokens
+        assert by_rid[r.rid].prompt_len == len(r.tokens)
+
+
+def test_scheduler_eos_retires_slot(bundle60, params60):
+    """A request whose eos_id matches an emitted token retires early and
+    frees its slot for the next admission."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(4)
+    prompt = _rand_prompt(rng, V, 6, 7)
+    ref, _ = engine.generate(bundle60, params60,
+                             {"tokens": jnp.asarray(prompt)[None]},
+                             steps=5, max_len=32)
+    ref = np.asarray(ref)[0].tolist()
+    eos = ref[2]
+
+    reqs = [Request(rid=0, tokens=prompt, max_new_tokens=6, eos_id=eos),
+            Request(rid=1, tokens=_rand_prompt(rng, V),
+                    max_new_tokens=3)]
+    sched = Scheduler(bundle60, params60, num_slots=1, max_len=32,
+                      dtype=jnp.float32, prompt_bucket=8)
+    comps = {c.rid: c for c in sched.run(reqs)}
+    assert comps[0].tokens == ref[:3]         # stopped AT the eos token
+    assert len(comps[1].tokens) == 3          # admitted after the eviction
+    assert sched.stats["evictions"] == 2
+
+
+def test_scheduler_rejects_oversized_request(bundle60, params60):
+    """Rejection happens at submit() — co-queued requests are unaffected."""
+    sched = Scheduler(bundle60, params60, num_slots=1, max_len=8,
+                      dtype=jnp.float32)
+    with pytest.raises(ValueError, match="exceeds max_len"):
+        sched.submit(Request(rid=0, tokens=np.arange(1, 7, dtype=np.int32),
+                             max_new_tokens=8))
+    assert not sched.pending         # nothing half-queued
+
+
+def test_scheduler_moe_unpadded_admission():
+    """MoE bundles (row-coupled capacity routing → ragged_prefill_ok=False)
+    go through exact-length admission and still match per-request
+    generate."""
+    bundle = model_zoo.build_arch("qwen3-moe-30b-a3b", smoke=True,
+                                  dtype=jnp.float32)
+    assert not bundle.ragged_prefill_ok
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    V = bundle.cfg.vocab_size
+    rng = np.random.default_rng(7)
+    reqs = [Request(rid=r, tokens=_rand_prompt(rng, V, 3, 9),
+                    max_new_tokens=int(rng.integers(2, 4)))
+            for r in range(3)]
+    sched = Scheduler(bundle, params, num_slots=2, max_len=16,
+                      dtype=jnp.float32, prompt_bucket=8)
+    comps = {c.rid: c for c in sched.run(reqs)}
+    for r in reqs:
+        out, _ = engine.generate(
+            bundle, params, {"tokens": jnp.asarray(r.tokens)[None]},
+            steps=r.max_new_tokens - 1, max_len=16)
+        assert comps[r.rid].tokens == np.asarray(out)[0].tolist(), \
+            f"rid {r.rid}"
+
+
+def test_prefill_rejects_pad_id_on_unsafe_bundle():
+    bundle = model_zoo.build_arch("xlstm-125m", smoke=True,
+                                  dtype=jnp.float32)
+    with pytest.raises(ValueError, match="ragged_prefill_ok"):
+        engine.build_prefill(bundle, max_len=16, pad_id=0)
+
+
+def test_scheduler_recurrent_family_unpadded_admission():
+    """Recurrent-state bundles (ragged_prefill_ok=False) must decode the
+    same tokens through the scheduler as per-request lockstep generate —
+    admission may not right-pad their prompts."""
+    bundle = model_zoo.build_arch("xlstm-125m", smoke=True,
+                                  dtype=jnp.float32)
+    assert not bundle.ragged_prefill_ok
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    V = bundle.cfg.vocab_size
+    rng = np.random.default_rng(6)
+    reqs = [Request(rid=r, tokens=_rand_prompt(rng, V, 3, 9),
+                    max_new_tokens=int(rng.integers(2, 5)))
+            for r in range(3)]
+    sched = Scheduler(bundle, params, num_slots=2, max_len=16,
+                      dtype=jnp.float32, prompt_bucket=8)
+    comps = {c.rid: c for c in sched.run(reqs)}
+    for r in reqs:
+        out, _ = engine.generate(
+            bundle, params, {"tokens": jnp.asarray(r.tokens)[None]},
+            steps=r.max_new_tokens - 1, max_len=16)
+        assert comps[r.rid].tokens == np.asarray(out)[0].tolist(), \
+            f"rid {r.rid}"
+
+
+# ---------------------------------------------------------------------------
+# Continuous vs lockstep: end-to-end token parity
+# ---------------------------------------------------------------------------
+
+def test_continuous_matches_lockstep(bundle60, qparams60):
+    """The continuous-batching engine must emit token-identical output to
+    the lockstep ``generate`` baseline for the same request set (greedy,
+    quantized weights)."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(5)
+    reqs = [Request(rid=r, tokens=_rand_prompt(rng, V),
+                    max_new_tokens=int(rng.integers(2, 8)))
+            for r in range(6)]
+    sched = Scheduler(bundle60, qparams60, num_slots=2, max_len=32,
+                      dtype=jnp.float32, prompt_bucket=8)
+    comps = {c.rid: c for c in sched.run(reqs)}
+
+    # lockstep baseline: one padded batch per pair of requests
+    for g in range(0, len(reqs), 2):
+        group = reqs[g: g + 2]
+        S = max(len(r.tokens) for r in group)
+        toks = np.full((len(group), S), PAD, np.int32)
+        for i, r in enumerate(group):
+            toks[i, : len(r.tokens)] = r.tokens
+        steps = max(r.max_new_tokens for r in group)
+        out, _ = engine.generate(
+            bundle60, qparams60, {"tokens": jnp.asarray(toks)},
+            steps=steps - 1, max_len=32, pad_id=PAD)
+        out = np.asarray(out)
+        for i, r in enumerate(group):
+            assert comps[r.rid].tokens == \
+                out[i, : r.max_new_tokens].tolist(), f"rid {r.rid}"
