@@ -155,6 +155,14 @@ class QGaLoreConfig:
     galore_embeddings: bool = False
     # distributed: project before the DP all-reduce (beyond-paper)
     compress_dp_grads: bool = False
+    # distributed subspace refresh: at refresh steps, reduce-scatter the
+    # full-rank gradient over the DP axes along the layer-stack dim, run
+    # each due layer's SVD on its owning shard only, and all-gather the new
+    # (small, INT4) P — instead of pmean-replicating the full-rank gradient
+    # and repeating every SVD on every device. Only applies to stacked
+    # leaves whose layer dim divides the DP world size; others fall back to
+    # the replicated refresh. Requires compress_dp_grads + a mesh.
+    dist_refresh: bool = True
 
 
 @dataclass(frozen=True)

@@ -118,6 +118,14 @@ class SubspaceController:
         return {self.specs[i].path: [u.interval for u in us]
                 for i, us in self.units.items()}
 
+    def svd_count_summary(self) -> Dict[str, List[int]]:
+        """{leaf path: per-unit SVD counts} — the layer-adaptive signature of
+        a run (golden-trajectory fixtures pin this exactly: a refactor that
+        perturbs similarities enough to flip an interval doubling shows up
+        here even when the loss curve stays inside its band)."""
+        return {self.specs[i].path: [u.svd_count for u in us]
+                for i, us in self.units.items()}
+
     # -- checkpointing ------------------------------------------------------
     def to_json(self) -> str:
         blob = {

@@ -54,6 +54,16 @@ def lowrank_shape(shape: Tuple[int, ...], rank: int) -> Tuple[int, ...]:
 # Subspace computation
 # ---------------------------------------------------------------------------
 
+def random_orthonormal(key: jax.Array, d: int, r: int,
+                       batch: int = 0) -> jax.Array:
+    """Random orthonormal frame(s) ``(batch?, d, r)`` — the cold-start
+    projection (the controller forces a real refresh at step 0) and the
+    rotation generator for subspace-invariance property tests."""
+    b = max(batch, 1)
+    q = jnp.linalg.qr(jax.random.normal(key, (b, d, r), jnp.float32))[0]
+    return q if batch else q[0]
+
+
 def _topr_svd(G: jax.Array, rank: int, side: str) -> jax.Array:
     """Exact top-r singular vectors. G: (m, n) float32."""
     U, _, Vh = jnp.linalg.svd(G, full_matrices=False)

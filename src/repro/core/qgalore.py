@@ -147,9 +147,7 @@ def _hyper(cfg: QGaLoreConfig) -> AdamHyper:
 def _init_projection(spec: LeafSpec, cfg: QGaLoreConfig, key) -> Any:
     """Random-orthonormal init; the controller forces a refresh at step 0."""
     d, r = projector.proj_dim(spec.mat_shape), spec.rank
-    b = spec.nbatch
-    k = jax.random.normal(key, (b, d, r), jnp.float32)
-    q = jnp.linalg.qr(k)[0]
+    q = projector.random_orthonormal(key, d, r, batch=spec.nbatch)
     q = q.reshape(spec.batch + (d, r)) if spec.batch else q[0]
     if cfg.proj_bits >= 16:
         return q.astype(jnp.float32)
@@ -181,21 +179,17 @@ def init(params, cfg: QGaLoreConfig, key=None) -> QGaLoreState:
 # Subspace refresh (in-graph, mask-gated)
 # ---------------------------------------------------------------------------
 
-def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
-                  cfg: QGaLoreConfig, key):
-    """Recompute P for the masked batch entries of one leaf.
+def refresh_slice(g, P_flat, mask, idx, cfg: QGaLoreConfig, rank: int,
+                  side: str, key):
+    """Mask-gated subspace refresh over a flat slice of batch entries.
 
-    grad_full: (batch..., m, n); P_old: QTensor/array (batch..., d, r);
-    mask: (nbatch,) bool. Returns (P_new, sims (nbatch,)).
-    sims = -1 where not refreshed.
+    ``g``: (b, m, n) f32 gradient slices; ``P_flat``: projection with every
+    inner leaf carrying leading dim b; ``mask``: (b,) bool; ``idx``: (b,)
+    int32 GLOBAL unit indices — per-unit RNG folding uses the global index,
+    so a layer-sharded (distributed) refresh draws the same randoms as the
+    replicated scan. Returns (P_new_flat, sims (b,)); sims = -1 where not
+    refreshed. Only masked entries pay the SVD (``lax.cond`` in the scan).
     """
-    b = spec.nbatch
-    m, n = spec.mat_shape
-    d, r = projector.proj_dim(spec.mat_shape), spec.rank
-    g = grad_full.reshape(b, m, n).astype(jnp.float32)
-    # flatten leading batch dims of every inner leaf (q / scale / zero)
-    P_flat = jax.tree_util.tree_map(
-        lambda x: x.reshape((b,) + x.shape[len(spec.batch):]), P_old)
 
     def body(carry, inp):
         g_b, P_b, mask_b, i = inp
@@ -203,7 +197,7 @@ def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
         def do_refresh(_):
             sub_key = jax.random.fold_in(key, i)
             P_new = projector.compute_subspace(
-                g_b, spec.rank, spec.side, cfg.subspace_method, sub_key,
+                g_b, rank, side, cfg.subspace_method, sub_key,
                 cfg.subspace_iters)
             sim = projector.subspace_similarity(
                 projector.maybe_dequantize(P_b), P_new)
@@ -218,9 +212,29 @@ def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
         P_out, sim = jax.lax.cond(mask_b, do_refresh, keep, operand=None)
         return carry, (P_out, sim)
 
-    idx = jnp.arange(b, dtype=jnp.int32)
     _, (P_new_flat, sims) = jax.lax.scan(
-        body, 0, (g, P_flat, mask.astype(bool), idx))
+        body, 0, (g.astype(jnp.float32), P_flat, mask.astype(bool),
+                  idx.astype(jnp.int32)))
+    return P_new_flat, sims
+
+
+def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
+                  cfg: QGaLoreConfig, key):
+    """Recompute P for the masked batch entries of one leaf.
+
+    grad_full: (batch..., m, n); P_old: QTensor/array (batch..., d, r);
+    mask: (nbatch,) bool. Returns (P_new, sims (nbatch,)).
+    sims = -1 where not refreshed.
+    """
+    b = spec.nbatch
+    m, n = spec.mat_shape
+    g = grad_full.reshape(b, m, n)
+    # flatten leading batch dims of every inner leaf (q / scale / zero)
+    P_flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((b,) + x.shape[len(spec.batch):]), P_old)
+    P_new_flat, sims = refresh_slice(
+        g, P_flat, mask, jnp.arange(b, dtype=jnp.int32), cfg, spec.rank,
+        spec.side, key)
     # restore original leading batch dims, leaf-wise (works for QTensor and
     # plain arrays alike — aux metadata is preserved by the scan/cond).
     P_new = jax.tree_util.tree_map(

@@ -12,6 +12,15 @@ gradient dim (m for right-projection, n for left), so they inherit that dim's
 sharding from the parent weight; the INT4 projection P (d, r) inherits the
 *projected-away* dim's sharding on d. This keeps the deepseek-671b expert
 moments (~27 GB INT8) sharded 16-way rather than replicated.
+
+ZeRO sharding (``opt_state_sharding(..., zero_axes=...)``): on top of the
+model-axis rules, the low-rank Adam moments and INT4 projections are
+partitioned over the data-parallel axes — each DP rank owns a 1/D slice of
+the quantized optimizer state and the slice is gathered (by GSPMD, at the
+point of use) only inside the fused update. Dim choice is divisibility-aware
+and composes with an existing model-axis sharding when the combined product
+still divides the dim; leaves where nothing divides stay as-is (graceful
+fallback, mirroring the narrow-GQA rule above). See docs/distributed.md.
 """
 from __future__ import annotations
 
@@ -130,9 +139,45 @@ def spec_for(shape, logical, mesh: Mesh) -> P:
     return P(*parts)
 
 
-def _qtensor_sharding(qt: QTensor, logical, mesh: Mesh) -> QTensor:
-    qspec = spec_for(qt.q.shape, logical, mesh)
-    sspec = spec_for(qt.scale.shape, logical, mesh)
+def _extend_with_zero(spec: P, shape, mesh: Mesh, zero_axes,
+                      skip_last: bool = False) -> P:
+    """Add DP-axis (ZeRO) partitioning to an existing spec.
+
+    Picks the largest dim that can absorb ``zero_axes`` — either free and
+    divisible by their product, or already sharded with the combined product
+    still dividing — and appends the zero axes to that dim's sharding. Leaves
+    the spec unchanged when nothing divides. ``skip_last`` protects the
+    quantized last axis of QTensor inner arrays (codes vs per-block scales
+    disagree on its size, so sharding it would desynchronize them).
+    """
+    if not zero_axes:
+        return spec
+    ztot = int(np.prod([mesh.shape[a] for a in zero_axes]))
+    if ztot <= 1:
+        return spec
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    ndims = len(shape) - (1 if skip_last else 0)
+    for i in sorted(range(ndims), key=lambda j: (-shape[j], j)):
+        cur = parts[i]
+        cur_t = () if cur is None else (
+            (cur,) if isinstance(cur, str) else tuple(cur))
+        if set(zero_axes) & set(cur_t):
+            continue
+        combined = ztot * int(np.prod([mesh.shape[a] for a in cur_t]) or 1)
+        if shape[i] > 0 and shape[i] % combined == 0:
+            new = cur_t + tuple(zero_axes)
+            parts[i] = new if len(new) > 1 else new[0]
+            return P(*parts)
+    return spec
+
+
+def _qtensor_sharding(qt: QTensor, logical, mesh: Mesh,
+                      zero_axes=()) -> QTensor:
+    qspec = _extend_with_zero(spec_for(qt.q.shape, logical, mesh),
+                              qt.q.shape, mesh, zero_axes, skip_last=True)
+    sspec = _extend_with_zero(spec_for(qt.scale.shape, logical, mesh),
+                              qt.scale.shape, mesh, zero_axes,
+                              skip_last=True)
     return QTensor(
         NamedSharding(mesh, qspec), NamedSharding(mesh, sspec),
         None if qt.zero is None else NamedSharding(mesh, sspec),
@@ -173,16 +218,29 @@ def _galore_state_logicals(spec: LeafSpec, logical):
     return mom, proj
 
 
-def _shard_like(leaf, logical, mesh):
+def _shard_like(leaf, logical, mesh, zero_axes=()):
     if quant.is_qtensor(leaf):
-        return _qtensor_sharding(leaf, logical, mesh)
+        return _qtensor_sharding(leaf, logical, mesh, zero_axes)
     if leaf is None:
         return None
-    return NamedSharding(mesh, spec_for(leaf.shape, logical, mesh))
+    spec = _extend_with_zero(spec_for(leaf.shape, logical, mesh),
+                             leaf.shape, mesh, zero_axes)
+    return NamedSharding(mesh, spec)
 
 
-def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh):
-    """Sharding pytree for a QGaLoreState aligned with ``params``."""
+def zero_axes_for(mesh: Mesh) -> Tuple[str, ...]:
+    """The DP axes a ZeRO-sharded optimizer state partitions over."""
+    return batch_axes(mesh)
+
+
+def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh,
+                       zero_axes: Tuple[str, ...] = ()):
+    """Sharding pytree for a QGaLoreState aligned with ``params``.
+
+    ``zero_axes``: DP mesh axes to additionally partition the Adam moments
+    and projection matrices over (ZeRO-style optimizer-state sharding).
+    Empty tuple = the pre-existing model-axis-only behavior.
+    """
     specs = qgalore.leaf_specs(params, cfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=quant.is_qtensor)
@@ -202,10 +260,10 @@ def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh):
         else:
             mom_log, proj_log = logical, None
         inner_out.append(Adam8bitState(
-            _shard_like(inner.m, mom_log, mesh),
-            _shard_like(inner.v, mom_log, mesh)))
+            _shard_like(inner.m, mom_log, mesh, zero_axes),
+            _shard_like(inner.v, mom_log, mesh, zero_axes)))
         proj_out.append(None if proj is None
-                        else _shard_like(proj, proj_log, mesh))
+                        else _shard_like(proj, proj_log, mesh, zero_axes))
 
     from repro.core.qgalore import QGaLoreState
     return QGaLoreState(

@@ -1,12 +1,25 @@
 """Production meshes. Functions, not module constants — importing this module
-never touches jax device state."""
+never touches jax device state (``force_host_device_count`` must therefore be
+called before anything else imports jax)."""
 from __future__ import annotations
 
-import jax
+import os
+
+
+def force_host_device_count(n: int) -> None:
+    """Emulate ``n`` devices on the host CPU platform (CI / laptops): appends
+    the XLA flag, so it MUST run before jax initializes its backends. The
+    distributed tests and ``benchmarks/dist_bench.py`` run their meshes this
+    way; on real hardware it is a no-op (don't call it)."""
+    if n and n > 0:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={n}")
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 single-pod (256 chips) or 2×16×16 multi-pod (512 chips)."""
+    import jax
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
@@ -14,4 +27,14 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests/small runs (e.g. (2, 2) on 4 host devices)."""
+    import jax
     return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_dp_mesh(num_devices: int = 0):
+    """Pure data-parallel mesh ``(D, 1)`` over ``("data", "model")`` — the
+    shape the compressed-DP + ZeRO training mode runs on when the model fits
+    one device (the Q-GaLore regime: INT8 weights + low-rank INT8 state)."""
+    import jax
+    d = num_devices or len(jax.devices())
+    return jax.make_mesh((d, 1), ("data", "model"))

@@ -8,10 +8,11 @@ single-device smoke runs.
     PYTHONPATH=src python -m repro.launch.train --arch llama-60m --smoke \
         --steps 50
     PYTHONPATH=src python -m repro.launch.train --arch yi-9b \
-        --mesh 16x16 --batch 256 --seq 4096 --compress   # on hardware
+        --mesh 16x16 --batch 256 --seq 4096 --compress --zero  # on hardware
+    PYTHONPATH=src python -m repro.launch.train --arch llama-60m --smoke \
+        --devices 8 --mesh 8x1 --compress --zero   # distributed mode on CPU
 """
 import argparse
-import os
 
 
 def main():
@@ -26,7 +27,11 @@ def main():
     ap.add_argument("--optimizer", default="qgalore")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--compress", action="store_true",
-                    help="DP low-rank gradient compression (shard_map)")
+                    help="DP low-rank gradient compression + distributed "
+                         "subspace refresh (shard_map)")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO-shard the quantized optimizer state over "
+                         "the DP axes")
     ap.add_argument("--mesh", default="",
                     help="dxm, e.g. 4x2 (data x model); empty = single dev")
     ap.add_argument("--devices", type=int, default=0,
@@ -37,10 +42,8 @@ def main():
                     help="initialize jax.distributed (real clusters)")
     args = ap.parse_args()
 
-    if args.devices:
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
-                                   + f" --xla_force_host_platform_device_"
-                                     f"count={args.devices}")
+    from repro.launch.mesh import force_host_device_count
+    force_host_device_count(args.devices)
     import jax
     if args.multihost:
         jax.distributed.initialize()
@@ -71,9 +74,18 @@ def main():
                        checkpoint_every=args.checkpoint_every)
     cell = ShapeCell("train", args.seq, args.batch, "train")
     trainer = Trainer(bundle, tcfg, qcfg, cell=cell, accum=args.accum,
-                      mesh=mesh,
+                      mesh=mesh, zero_shard=args.zero and mesh is not None,
                       param_dtype=jnp.float32 if args.smoke
                       else jnp.bfloat16)
+    if mesh is not None:
+        leaves = [l for l in jax.tree_util.tree_leaves(trainer.state.opt)
+                  if hasattr(l, "addressable_shards")]
+        tot = sum(l.nbytes for l in leaves)
+        per_dev = sum(max(s.data.nbytes for s in l.addressable_shards)
+                      for l in leaves)
+        logging.getLogger("repro.launch").info(
+            "optimizer state: %.1f MB global, %.1f MB max/device "
+            "(zero_shard=%s)", tot / 2**20, per_dev / 2**20, args.zero)
     trainer.maybe_restore()
     hist = trainer.run()
     print(f"final loss {hist[-1]['loss']:.4f}; "

@@ -7,11 +7,15 @@ to ``<dir>.tmp`` and are published with an atomic ``os.rename`` — a crash
 mid-write never corrupts the latest checkpoint.
 
 Mesh independence: arrays are gathered to host before writing, so a
-checkpoint saved on one mesh restores onto any other (elastic scaling); the
-restore path ``device_put``s each leaf with the *target* sharding. (A real
->10B deployment would write per-shard TensorStore slices instead; the
-resharding logic — restore-with-new-sharding — is the part that transfers,
-and is what ``tests/test_elastic.py`` exercises.)
+checkpoint saved on one mesh restores onto any other (elastic scaling) —
+including a ZeRO-sharded optimizer state saved on one DP world size and
+restored onto another (each leaf is a global jax.Array; ``device_get``
+assembles the full value regardless of layout); the restore path
+``device_put``s each leaf with the *target* sharding. (A real >10B
+deployment would write per-shard TensorStore slices instead; the resharding
+logic — restore-with-new-sharding — is the part that transfers, and is what
+``tests/test_distributed.py::test_elastic_checkpoint_reshard`` and
+``::test_zero_sharded_state_matches_and_reshards`` exercise.)
 
 Async: ``save`` snapshots to host synchronously (cheap device_get) and hands
 serialization to a background thread; ``wait()`` joins before the next save

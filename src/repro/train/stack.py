@@ -79,17 +79,24 @@ def _tree_add(a, b):
                                   is_leaf=lambda x: x is None)
 
 
+def project_leaf(g, P, side: Optional[str] = None):
+    """Project one (possibly stacked) full-rank gradient leaf into the
+    rank-r subspace of ``P`` (QTensor or array; leading batch dims ride the
+    einsum). Shared by the backward-scan low-rank emission here and the
+    distributed refresh in ``train.step`` (which projects the freshly
+    reduced gradient slices with the just-recomputed P)."""
+    if P is None:
+        return g
+    Pd = projector.maybe_dequantize(P, jnp.float32)
+    side = side or projector.galore_side(g.shape)
+    return projector.project(g.astype(jnp.float32), Pd, side)
+
+
 def _project_cotangents(g_lp, P_lp):
     """Per-leaf: if a projection matrix is provided, emit the low-rank
     projection of the cotangent; else the full cotangent."""
-    def one(g, P):
-        if P is None:
-            return g
-        Pd = projector.maybe_dequantize(P, jnp.float32)
-        side = projector.galore_side(g.shape)
-        return projector.project(g.astype(jnp.float32), Pd, side)
     return jax.tree_util.tree_map(
-        one, g_lp, P_lp,
+        project_leaf, g_lp, P_lp,
         is_leaf=lambda x: x is None or quant.is_qtensor(x))
 
 
@@ -141,8 +148,14 @@ def fused_value_and_grad(bundle: ModelBundle, params, batch,
     """Loss + gradients with per-layer fused backward and in-scan projection.
 
     ``proj_trees``: {segment_key: pytree matching that segment's params with
-    stacked P (or None per leaf)}. Pass {} to get full-rank grads everywhere
-    (e.g. at subspace-refresh steps or for non-GaLore baselines).
+    stacked P (or None per leaf)} — segment cotangents project INSIDE the
+    backward scan; entries under NON-segment keys (``head``, ``embedding``
+    when ``galore_embeddings``) project right after the head/embed vjps, so
+    every GaLore leaf leaves this function low-rank and the DP reduction
+    payload is low-rank across the board (the unembedding gradient otherwise
+    dominates bytes-on-wire at small-model shapes). Pass {} to get full-rank
+    grads everywhere (e.g. at subspace-refresh steps or for non-GaLore
+    baselines).
 
     Returns ((loss, metrics), grads) where grads for projected leaves are
     low-rank (spec.low_shape) and full-rank elsewhere. Grad leaves for
@@ -200,6 +213,9 @@ def fused_value_and_grad(bundle: ModelBundle, params, batch,
     grads = {**g_nonseg, **g_segs}
     grads = {k: grads[k] for k in params.keys()}
     grads = quant.tree_devirtualize_grads(grads)
+    for k, P_sub in proj_trees.items():
+        if k not in g_segs and k in grads:      # nonseg galore leaves
+            grads[k] = _project_cotangents(grads[k], P_sub)
     return (loss, metrics), grads
 
 

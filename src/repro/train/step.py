@@ -34,7 +34,9 @@ from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro import compat
 from repro.config import QGaLoreConfig, TrainConfig
 from repro.core import qgalore, quant
 from repro.core.qgalore import QGaLoreState
@@ -122,6 +124,23 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
     LOW-RANK payload (≈ min(m,n)/r smaller, once per step instead of once
     per microbatch). The model axis stays auto (GSPMD). GSPMD alone places
     the DP all-reduce at the full-rank dW einsum — this is the fix.
+
+    Refresh steps in this mode run the DISTRIBUTED subspace refresh
+    (``qcfg.dist_refresh``): for each stacked GaLore leaf whose layer dim
+    divides the DP world size, the full-rank gradient is reduce-scattered
+    over the layer-stack dim (each device receives the *reduced* gradient
+    for only its owned layers — half the wire bytes of an all-reduce and no
+    full-rank replica anywhere), the owning shard runs the mask-gated SVD
+    for its layers, projects its slice low-rank with the new P, and
+    all-gathers only the small results (low-rank grads + INT4 P + sims).
+    ``apply_updates`` then sees those leaves as already-refreshed steady
+    leaves. RNG folding uses global unit indices, so the distributed refresh
+    draws the same randoms as the replicated one. Leaves that don't divide
+    (or expert-parallel leaves) fall back to the replicated in-optimizer
+    refresh. Note the gradient-clip norm at such refresh steps is computed
+    on the LOW-RANK payload for distributed leaves (exactly as every
+    steady-state compressed step already does), so plain-mode and
+    dist-refresh trajectories agree only to clip-scale tolerance.
     """
     specs = _specs_for(bundle, qcfg, param_dtype)
     seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
@@ -170,14 +189,24 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         return loss, metrics, grads
 
     dp_axes: tuple = ()
+    dp_size = 1
     if dp_compress and mesh is not None:
         from jax.sharding import PartitionSpec as P
         dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        dp_size = int(np.prod([mesh.shape[a] for a in dp_axes])) \
+            if dp_axes else 1
 
-    # BF16 grad reduction (paper keeps grads BF16) halves the residual
-    # full-rank payloads, but XLA:CPU crashes on bf16 psum under shard_map
-    # ("Invalid binary instruction opcode copy", hlo_instruction.cc) —
-    # enable on TPU backends only. See EXPERIMENTS.md §Perf iteration 4.
+    # BF16 grad reduction (paper §3.1 keeps gradients BF16) halves the
+    # residual full-rank payloads on the wire. It is OFF by default because
+    # XLA:CPU cannot lower a bf16 psum inside a shard_map body — compilation
+    # crashes with "Invalid binary instruction opcode copy"
+    # (hlo_instruction.cc): the CPU emitter is missing the bf16<->f32
+    # convert-around-reduce pattern the TPU backend inserts. The workaround
+    # is simply to reduce in f32 on CPU (this flag) — numerics are a
+    # superset of the bf16 reduction, so CI exercises the same code path at
+    # higher precision. Set REPRO_BF16_REDUCE=1 on TPU backends, where the
+    # cast is applied right before the pmean below. See EXPERIMENTS.md
+    # §Perf iteration 4.
     import os as _os
     _BF16_REDUCE = _os.environ.get("REPRO_BF16_REDUCE", "0") == "1"
 
@@ -202,9 +231,31 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
                 specs.append(P())
         return jax.tree_util.tree_unflatten(treedef, specs)
 
-    def grad_phase_dp(params, proj_trees, batch):
+    # Leaves eligible for the distributed refresh: stacked GaLore leaves
+    # whose layer-stack dim divides the DP world size (so psum_scatter can
+    # tile it), excluding expert-parallel leaves (their gradients are owned
+    # per EP shard and never cross the DP front whole).
+    dist_refresh_ok = set()
+    if dp_axes and qcfg.enabled and qcfg.dist_refresh:
+        for i, sp in enumerate(specs):
+            if (sp.galore and sp.batch and sp.batch[0] % dp_size == 0
+                    and not _is_expert(sp.path)):
+                dist_refresh_ok.add(i)
+
+    def grad_phase_dp(params, proj_trees, batch, refresh_proj=None,
+                      refresh_masks=None, rng=None):
+        """The manual-DP gradient phase.
+
+        Steady state (``refresh_proj is None``): one pmean on the low-rank
+        payload. Refresh steps: additionally runs the distributed subspace
+        refresh for the leaves in ``refresh_proj`` (keys = str(leaf index))
+        and returns their new projections + similarities; those leaves'
+        gradients come back LOW-RANK.
+        """
         from jax.sharding import PartitionSpec as P
         other_axes = tuple(a for a in dp_axes if a != moe_ep_axis)
+        dist_now = sorted(int(k) for k in refresh_proj) \
+            if refresh_proj is not None else []
 
         def inner(p, pt, b):
             loss, metrics, grads = grad_phase(p, pt, b)
@@ -216,8 +267,18 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
             # the EP axis at all.
             flat, treedef = jax.tree_util.tree_flatten_with_path(grads)
             out = []
-            for path, g in flat:
+            for i, (path, g) in enumerate(flat):
                 pstr = jax.tree_util.keystr(path)
+                if i in dist_now:
+                    # distributed refresh, phase 1: reduce-scatter the
+                    # full-rank gradient over the layer stack — each shard
+                    # leaves this region holding the REDUCED gradient of
+                    # its owned layers only ((D-1)/D of an all-reduce's
+                    # bytes, and no device ever holds a full-rank replica).
+                    out.append(jax.lax.psum_scatter(
+                        g.astype(jnp.float32), dp_axes,
+                        scatter_dimension=0, tiled=True) / dp_size)
+                    continue
                 if _BF16_REDUCE and g.dtype == jnp.float32:
                     g = g.astype(jnp.bfloat16)
                 if _is_expert(pstr):
@@ -242,10 +303,14 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         gflat, gtreedef = jax.tree_util.tree_flatten_with_path(
             params, is_leaf=_q.is_qtensor)
         gspecs = []
-        for path, leaf in gflat:
+        for i, (path, leaf) in enumerate(gflat):
             pstr = jax.tree_util.keystr(path)
             nd = len(leaf.shape)
-            if _is_expert(pstr) and nd >= 3:
+            if i in dist_now:
+                # reduced full-rank gradient leaves the region layer-
+                # sharded over the DP front (psum_scatter tiling)
+                gspecs.append(P(dp_axes, *([None] * (nd - 1))))
+            elif _is_expert(pstr) and nd >= 3:
                 parts = [None] * nd
                 parts[1] = moe_ep_axis
                 gspecs.append(P(*parts))
@@ -254,12 +319,72 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         grads_specs = jax.tree_util.tree_unflatten(gtreedef, gspecs)
 
         from repro.compat import shard_map
-        return shard_map(
+        loss, metrics, grads = shard_map(
             inner, mesh=mesh, axis_names=set(dp_axes),
             in_specs=(_manual_specs(params), _manual_specs(proj_trees),
                       batch_specs),
             out_specs=(P(), P(), grads_specs),
             check_vma=False)(params, proj_trees, batch)
+        if not dist_now:
+            return loss, metrics, grads, {}, {}
+
+        # ---- distributed refresh, phase 2: per-owner SVD + broadcast ----
+        # A SECOND region, manual over ALL mesh axes: the mask-gated SVD
+        # scan lowers to custom calls the partial-manual SPMD partitioner
+        # cannot propagate shardings through (same XLA limitation the
+        # manual-EP MoE documents in models/moe.py) — in a fully-manual
+        # region they are plain local ops. Only the small refresh state
+        # enters (layer-sharded reduced grads, P, masks); params and batch
+        # stay out, so the model axes simply see replicated copies.
+        g_flat2, g_treedef2 = jax.tree_util.tree_flatten(grads)
+        gd = {str(i): g_flat2[i] for i in dist_now}
+
+        def refresh_inner(gd, pd, md, key, sid):
+            new_low, new_proj, sims = {}, {}, {}
+            for i in dist_now:
+                sp = specs[i]
+                b_loc = sp.nbatch // dp_size
+                m, n = sp.mat_shape
+                g_loc = gd[str(i)].reshape(b_loc, m, n)
+                nlead = len(sp.batch)
+                P_flat = jax.tree_util.tree_map(
+                    lambda x: x.reshape((b_loc,) + x.shape[nlead:]),
+                    pd[str(i)])
+                mask_flat = md[str(i)].reshape(b_loc)
+                # sid enters sharded over the DP axes: the local element
+                # IS this shard's flat index (lax.axis_index lowers to
+                # PartitionId, which XLA:CPU rejects — see repro.compat).
+                idx = jnp.arange(b_loc, dtype=jnp.int32) + sid[0] * b_loc
+                P_new_flat, sim_loc = qgalore.refresh_slice(
+                    g_loc, P_flat, mask_flat, idx, qcfg, sp.rank,
+                    sp.side, jax.random.fold_in(key, i))
+                low_loc = stack.project_leaf(g_loc, P_new_flat, sp.side)
+                gather = functools.partial(
+                    compat.all_gather_tiled, axes=dp_axes, axis=0,
+                    world=dp_size, index=sid[0])
+                new_low[str(i)] = gather(low_loc).reshape(sp.low_shape)
+                new_proj[str(i)] = jax.tree_util.tree_map(
+                    lambda x: gather(x).reshape(sp.batch + x.shape[1:]),
+                    P_new_flat)
+                sims[sp.path] = gather(sim_loc)
+            return new_low, new_proj, sims
+
+        shard0 = lambda t: jax.tree_util.tree_map(
+            lambda x: P(dp_axes, *([None] * (x.ndim - 1))), t)
+        repl = lambda t: jax.tree_util.tree_map(lambda _: P(), t)
+        sims_out_specs = {specs[i].path: P() for i in dist_now}
+        shard_ids = jnp.arange(dp_size, dtype=jnp.int32)
+        new_low, new_proj, sims = shard_map(
+            refresh_inner, mesh=mesh, axis_names=None,
+            in_specs=(shard0(gd), shard0(refresh_proj),
+                      shard0(refresh_masks), P(), P(dp_axes)),
+            out_specs=(repl(gd), repl(refresh_proj), sims_out_specs),
+            check_vma=False)(gd, refresh_proj, refresh_masks, rng,
+                             shard_ids)
+        for i in dist_now:
+            g_flat2[i] = new_low[str(i)]
+        grads = jax.tree_util.tree_unflatten(g_treedef2, g_flat2)
+        return loss, metrics, grads, new_proj, sims
 
     def step(state: TrainState, batch, lr, rng,
              refresh_masks: Optional[Dict[int, jax.Array]] = None,
@@ -268,14 +393,42 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
 
         # projection trees for the fused backward (low-rank emission) —
         # skipped at refresh steps (full-rank grads needed for SVD).
+        # Non-segment galore leaves (head, embedding) ride along so their
+        # cotangents also go low-rank before clip / DP reduction.
         proj_trees: Dict[str, Any] = {}
         if impl == "fused" and qcfg.enabled and not refresh:
-            for k in seg_keys:
-                if k in opt.proj:
-                    proj_trees[k] = opt.proj[k]
+            for k, sub in opt.proj.items():
+                leaves = jax.tree_util.tree_leaves(
+                    sub, is_leaf=lambda x: x is None or quant.is_qtensor(x))
+                if k in seg_keys or any(l is not None for l in leaves):
+                    proj_trees[k] = sub
 
+        dist_sims: Dict[str, jax.Array] = {}
         if dp_axes:
-            loss, metrics, grads = grad_phase_dp(params, proj_trees, batch)
+            dist_idx = [i for i in sorted(dist_refresh_ok)
+                        if refresh and refresh_masks and i in refresh_masks]
+            if dist_idx:
+                # distributed refresh: each owning shard recomputes its
+                # layers' P inside the gradient shard_map; apply_updates
+                # then treats these leaves as steady (low-rank grad, new P).
+                pr_flat, pr_treedef = jax.tree_util.tree_flatten(
+                    opt.proj,
+                    is_leaf=lambda x: quant.is_qtensor(x) or x is None)
+                rp = {str(i): pr_flat[i] for i in dist_idx}
+                rm = {str(i): jnp.asarray(refresh_masks[i]).reshape(
+                    specs[i].batch) for i in dist_idx}
+                loss, metrics, grads, new_proj, dist_sims = grad_phase_dp(
+                    params, proj_trees, batch, refresh_proj=rp,
+                    refresh_masks=rm, rng=rng)
+                for i in dist_idx:
+                    pr_flat[i] = new_proj[str(i)]
+                opt = opt._replace(proj=jax.tree_util.tree_unflatten(
+                    pr_treedef, pr_flat))
+                refresh_masks = {i: m for i, m in refresh_masks.items()
+                                 if i not in set(dist_idx)}
+            else:
+                loss, metrics, grads, _, _ = grad_phase_dp(
+                    params, proj_trees, batch)
         else:
             loss, metrics, grads = grad_phase(params, proj_trees, batch)
 
@@ -283,6 +436,10 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         new_params, new_opt, opt_metrics = qgalore.apply_updates(
             params, grads, opt, qcfg, lr=lr, rng=rng,
             refresh_masks=refresh_masks, refresh=refresh, specs=specs)
+        if dist_sims:
+            opt_metrics = {**opt_metrics,
+                           "sims": {**dist_sims,
+                                    **opt_metrics.get("sims", {})}}
         metrics = {**metrics, "loss": loss, "grad_norm": gnorm,
                    "lr": jnp.asarray(lr, jnp.float32)}
         return TrainState(new_params, new_opt), metrics, opt_metrics

@@ -61,8 +61,15 @@ class Trainer:
     def __init__(self, bundle: ModelBundle, tcfg: TrainConfig,
                  qcfg: QGaLoreConfig, *, cell=None, impl: str = "fused",
                  param_dtype=jnp.float32, accum: int = 1,
-                 mesh=None,
+                 mesh=None, zero_shard: bool = False,
                  fault_hook: Optional[Callable[[int], None]] = None):
+        """``mesh``: run the step distributed — params/optimizer state are
+        placed with the ``distributed.sharding`` rules, batches are sharded
+        over the DP axes, and the jitted steps pin state in/out shardings
+        so the layout survives every step. ``zero_shard`` additionally
+        partitions the quantized optimizer state (low-rank Adam moments +
+        INT4 projections) over the DP axes — ZeRO-style, each DP rank owns
+        a 1/D slice, gathered only where the fused update consumes it."""
         self.bundle = bundle
         self.tcfg = tcfg
         self.qcfg = qcfg
@@ -73,17 +80,51 @@ class Trainer:
                                       tcfg.global_batch, "train")
         self.fault_hook = fault_hook          # tests inject failures here
         self.stragglers = StragglerMonitor()
+        self.mesh = mesh
+        self.zero_shard = zero_shard
 
         raw_step, self.specs = step_lib.build_train_step(
             bundle, qcfg, tcfg, impl=impl, accum=accum,
             param_dtype=param_dtype, mesh=mesh,
             dp_compress=qcfg.compress_dp_grads and mesh is not None)
-        self._step_normal = jax.jit(
-            functools.partial(raw_step, refresh=False, refresh_masks=None))
-        self._step_refresh = jax.jit(
-            functools.partial(raw_step, refresh=True),
-            static_argnames=())
         self._raw_step = raw_step
+
+        self.state_sharding = None
+        self._batch_sharding = None
+        if mesh is not None:
+            from repro.distributed import sharding as sh
+            abs_state = step_lib.abstract_state(bundle, qcfg, param_dtype)
+            zaxes = sh.zero_axes_for(mesh) if zero_shard else ()
+            self.state_sharding = step_lib.TrainState(
+                sh.param_sharding(abs_state.params, mesh),
+                sh.opt_state_sharding(abs_state.params, abs_state.opt,
+                                      qcfg, mesh, zero_axes=zaxes))
+            from repro.data.synthetic import batch_for_bundle
+            batch_abs = jax.eval_shape(
+                lambda: batch_for_bundle(bundle, self.cell, 0, tcfg.seed))
+            self._batch_sharding = sh.data_sharding(batch_abs, mesh)
+            rep = sh.replicated(mesh)
+            # positional wrappers: jit in_shardings rejects kwargs, and the
+            # out sharding pins the (ZeRO) state layout across steps
+            self._step_normal = jax.jit(
+                lambda st, b, lr, rng: raw_step(
+                    st, b, lr, rng, refresh_masks=None, refresh=False),
+                in_shardings=(self.state_sharding, self._batch_sharding,
+                              rep, rep),
+                out_shardings=(self.state_sharding, None, None))
+            self._step_refresh = jax.jit(
+                lambda st, b, lr, rng, masks: raw_step(
+                    st, b, lr, rng, refresh_masks=masks, refresh=True),
+                in_shardings=(self.state_sharding, self._batch_sharding,
+                              rep, rep, rep),
+                out_shardings=(self.state_sharding, None, None))
+        else:
+            self._step_normal = jax.jit(
+                functools.partial(raw_step, refresh=False,
+                                  refresh_masks=None))
+            self._step_refresh = jax.jit(
+                functools.partial(raw_step, refresh=True),
+                static_argnames=())
 
         self.controller = adaptive.SubspaceController(self.specs, qcfg)
         self.mgr = None
@@ -94,6 +135,8 @@ class Trainer:
 
         self.state = step_lib.init_state(
             bundle, qcfg, jax.random.PRNGKey(tcfg.seed), param_dtype)
+        if self.state_sharding is not None:
+            self.state = jax.device_put(self.state, self.state_sharding)
         self.start_step = 0
         self.history: List[Dict[str, float]] = []
 
@@ -105,7 +148,11 @@ class Trainer:
     def maybe_restore(self) -> int:
         if self.mgr is None or self.mgr.latest_step() is None:
             return 0
-        state, meta = self.mgr.restore(None, self._abstract_state())
+        # state_sharding may describe a different mesh than the checkpoint
+        # was saved on — restore is elastic (arrays are host-gathered at
+        # save; device_put here re-places them under the current rules)
+        state, meta = self.mgr.restore(None, self._abstract_state(),
+                                       self.state_sharding)
         self.state = state
         if meta.get("controller"):
             self.controller.from_json(meta["controller"])
@@ -125,6 +172,8 @@ class Trainer:
             self.fault_hook(step)             # may raise (simulated failure)
         batch = batch_for_bundle(self.bundle, self.cell, step,
                                  self.tcfg.seed)
+        if self._batch_sharding is not None:
+            batch = jax.device_put(batch, self._batch_sharding)
         lr = optimizers.lr_at(step, self.tcfg)
         rng = jax.random.fold_in(jax.random.PRNGKey(self.tcfg.seed + 17),
                                  step)
@@ -138,7 +187,7 @@ class Trainer:
                 else jnp.zeros((s.nbatch,), bool)
                 for i, s in enumerate(self.specs) if s.galore}
             state, metrics, opt_metrics = self._step_refresh(
-                self.state, batch, lr, rng, refresh_masks=jmasks)
+                self.state, batch, lr, rng, jmasks)
             sims = {k: np.asarray(v)
                     for k, v in opt_metrics.get("sims", {}).items()}
             self.controller.observe(step, masks, sims)

@@ -1,0 +1,99 @@
+"""Golden-trajectory regression harness.
+
+A fixed-seed 40-step llama-60m (smoke) Q-GaLore run is pinned by a committed
+fixture (``tests/golden/llama60m_qgalore_40steps.json``):
+
+* the full loss curve, compared under a tolerance band — kernel or refactor
+  PRs cannot silently drift numerics past ``LOSS_RTOL/ATOL`` at any step;
+* the per-layer SVD counts and final adaptive intervals, compared EXACTLY —
+  the layer-adaptive lazy-update schedule (paper §3.2) is host-side integer
+  state, so any change to the similarity computation or controller logic
+  that flips a refresh decision fails loudly even when the losses stay in
+  band.
+
+Regenerate after an *intentional* numerics change with:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_golden.py -q
+
+and commit the updated fixture alongside the change that explains it.
+
+The exact 1-device vs N-device ``dp_compress`` parity companion lives in
+``tests/test_distributed.py::test_dp_compress_parity_1dev_vs_8dev`` (it
+needs a forced multi-device subprocess).
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QGaLoreConfig, ShapeCell, TrainConfig
+from repro.core.optimizers import preset
+from repro.models import model_zoo
+from repro.train.trainer import Trainer
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+FIXTURE = os.path.join(GOLDEN_DIR, "llama60m_qgalore_40steps.json")
+STEPS = 40
+LOSS_RTOL = 2e-3
+LOSS_ATOL = 2e-3
+
+
+def build_trainer() -> Trainer:
+    """The pinned configuration. Any change here invalidates the fixture —
+    bump the fixture's "config" stamp when you touch it."""
+    bundle = model_zoo.build_arch("llama-60m", smoke=True,
+                                  dtype=jnp.float32)
+    qcfg = preset("qgalore", QGaLoreConfig(
+        rank=8, min_dim=32, update_interval=4, adaptive_k=1,
+        cos_threshold=0.3))
+    tcfg = TrainConfig(
+        seed=0, global_batch=4, seq_len=32, steps=STEPS,
+        learning_rate=1e-2, warmup_steps=2, grad_clip=1.0, log_every=0,
+        async_checkpoint=False)
+    cell = ShapeCell("golden", 32, 4, "train")
+    return Trainer(bundle, tcfg, qcfg, cell=cell, impl="fused",
+                   param_dtype=jnp.float32)
+
+
+def run_trajectory() -> dict:
+    tr = build_trainer()
+    hist = tr.run()
+    return {
+        "config": "llama-60m smoke / qgalore r8 / seed 0 / 40 steps",
+        "losses": [float(h["loss"]) for h in hist],
+        "svd_counts": tr.controller.svd_count_summary(),
+        "intervals": tr.controller.interval_summary(),
+        "total_svd": tr.controller.total_svd_count(),
+        "baseline_svd": tr.controller.baseline_svd_count(STEPS),
+    }
+
+
+def test_golden_trajectory():
+    got = run_trajectory()
+    if os.environ.get("REPRO_REGEN_GOLDEN") == "1":
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(FIXTURE, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+        pytest.skip(f"regenerated {FIXTURE}")
+    assert os.path.exists(FIXTURE), (
+        "golden fixture missing — run REPRO_REGEN_GOLDEN=1 pytest "
+        "tests/test_golden.py and commit it")
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    assert got["config"] == want["config"]
+    np.testing.assert_allclose(
+        got["losses"], want["losses"], rtol=LOSS_RTOL, atol=LOSS_ATOL,
+        err_msg="loss trajectory drifted out of the golden band — if the "
+                "numerics change is intentional, regenerate the fixture "
+                "(see module docstring)")
+    assert got["svd_counts"] == want["svd_counts"], (
+        "per-layer SVD counts changed — the adaptive lazy-update schedule "
+        "took different refresh decisions than the golden run")
+    assert got["intervals"] == want["intervals"]
+    assert got["total_svd"] == want["total_svd"]
+    # the adaptive controller must actually have saved work vs fixed-T
+    assert got["total_svd"] <= got["baseline_svd"]

@@ -87,6 +87,105 @@ class TestProjectorInvariants:
         assert -1e-5 <= s <= 1.0 + 1e-5
 
 
+def _rand_orthogonal(key, r):
+    return jnp.linalg.qr(jax.random.normal(key, (r, r)))[0]
+
+
+def _lowrank_plus_noise(key, m, n, r_true, noise):
+    """A matrix with a clean rank-r_true spectral gap + small noise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    U = jnp.linalg.qr(jax.random.normal(k1, (m, r_true)))[0]
+    V = jnp.linalg.qr(jax.random.normal(k2, (n, r_true)))[0]
+    s = jnp.linspace(10.0, 5.0, r_true)
+    return U @ jnp.diag(s) @ V.T + noise * jax.random.normal(k3, (m, n))
+
+
+def _check_rotation_sign_perm_invariance(d, r, seed):
+    """subspace_similarity is a function of the SUBSPACE: invariant under
+    any rotation of the basis, and in particular under the sign flips and
+    permutations that make raw singular vectors non-unique."""
+    key = jax.random.PRNGKey(seed)
+    P = projector.random_orthonormal(key, d, r)
+    Q = projector.random_orthonormal(jax.random.fold_in(key, 1), d, r)
+    R = _rand_orthogonal(jax.random.fold_in(key, 2), r)
+    perm = jax.random.permutation(jax.random.fold_in(key, 3), r)
+    signs = jnp.where(
+        jax.random.bernoulli(jax.random.fold_in(key, 4), shape=(r,)),
+        1.0, -1.0)
+    for P2 in (P @ R, P[:, perm] * signs):
+        assert abs(float(projector.subspace_similarity(P, P2)) - 1.0) \
+            < 1e-4
+        np.testing.assert_allclose(
+            float(projector.subspace_similarity(Q, P2)),
+            float(projector.subspace_similarity(Q, P)), atol=1e-4)
+
+
+def _check_randomized_matches_svd(m, n, r, seed):
+    """On a low-rank-plus-noise matrix the randomized range finder and the
+    exact SVD must agree on the dominant subspace (overlap >= 0.95)."""
+    key = jax.random.PRNGKey(seed)
+    G = _lowrank_plus_noise(key, m, n, r, noise=0.01)
+    side = projector.galore_side((m, n))
+    P_svd = projector.compute_subspace(G, r, side, "svd")
+    P_rnd = projector.compute_subspace(G, r, side, "randomized",
+                                       jax.random.fold_in(key, 9))
+    overlap = float(projector.subspace_similarity(P_svd, P_rnd))
+    assert overlap >= 0.95, overlap
+
+
+def _check_shape_roundtrip(m, n, r, seed):
+    """galore_side / proj_dim / lowrank_shape / project / project_back are
+    one consistent shape system."""
+    key = jax.random.PRNGKey(seed)
+    G = jax.random.normal(key, (m, n))
+    side = projector.galore_side((m, n))
+    assert side == ("right" if m >= n else "left")
+    d = projector.proj_dim((m, n))
+    assert d == (n if m >= n else m)
+    P = projector.compute_subspace(G, r, side)
+    assert P.shape == (d, r)
+    low = projector.project(G, P, side)
+    assert low.shape == projector.lowrank_shape((m, n), r)
+    assert projector.project_back(low, P, side).shape == (m, n)
+    # quantized roundtrip keeps the virtual shape
+    qP = projector.quantize_projection(P, bits=4, block=256)
+    assert tuple(qP.shape) == (d, r)
+    assert projector.maybe_dequantize(qP).shape == (d, r)
+
+
+class TestProjectorSubspaceProperties:
+    """Hypothesis sweeps over the projector's subspace invariants (the
+    plain ``test_*_once`` variants keep the bodies exercised when
+    hypothesis isn't installed)."""
+
+    @given(d=st.sampled_from([32, 64, 96]), r=st.sampled_from([4, 8, 16]),
+           seed=st.integers(0, 2**16))
+    @_settings
+    def test_rotation_sign_perm_invariance(self, d, r, seed):
+        _check_rotation_sign_perm_invariance(d, r, seed)
+
+    @given(m=st.sampled_from([48, 64, 128]), n=st.sampled_from([32, 96]),
+           r=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+    @_settings
+    def test_randomized_matches_svd(self, m, n, r, seed):
+        _check_randomized_matches_svd(m, n, r, seed)
+
+    @given(m=st.sampled_from([32, 64, 100]), n=st.sampled_from([32, 80]),
+           r=st.sampled_from([4, 8]), seed=st.integers(0, 2**16))
+    @_settings
+    def test_shape_roundtrip(self, m, n, r, seed):
+        _check_shape_roundtrip(m, n, r, seed)
+
+    def test_invariance_once(self):
+        _check_rotation_sign_perm_invariance(64, 8, 7)
+
+    def test_randomized_once(self):
+        _check_randomized_matches_svd(64, 96, 8, 3)
+
+    def test_roundtrip_once(self):
+        _check_shape_roundtrip(100, 32, 8, 1)
+
+
 class TestDataInvariants:
     @given(step=st.integers(0, 10_000))
     @_settings
