@@ -1,3 +1,5 @@
 # Q-GaLore core: quantization, projection, adaptive subspace control,
-# 8-bit Adam, and the combined optimizer.
-from repro.core import adam8bit, adaptive, optimizers, projector, qgalore, quant  # noqa: F401
+# 8-bit Adam, param-group rules, the transform chain, and the combined
+# optimizer (the chain's fused executor).
+from repro.core import adam8bit, adaptive, optimizers, projector, qgalore, \
+    quant, rules, transform  # noqa: F401

@@ -30,6 +30,14 @@ class AdamHyper:
     bits: int = 8
     block: int = 256
 
+    @classmethod
+    def from_config(cls, cfg) -> "AdamHyper":
+        """Derive from a (per-group effective) ``QGaLoreConfig`` — with
+        param-group rules every leaf can carry its own ``adam_bits``, so
+        the hyper pair is derived per leaf (see repro.core.rules)."""
+        return cls(cfg.beta1, cfg.beta2, cfg.eps, cfg.adam_bits,
+                   cfg.quant_block)
+
 
 def _eff_block(shape, hyper: AdamHyper) -> int:
     return quant.auto_block(shape[-1], hyper.block)

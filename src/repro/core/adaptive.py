@@ -37,7 +37,8 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.config import QGaLoreConfig
-from repro.core.qgalore import LeafSpec
+from repro.core.rules import as_rules
+from repro.core.qgalore import LeafSpec, _eff_cfg
 
 
 @dataclass
@@ -51,18 +52,31 @@ class _Unit:
 
 
 class SubspaceController:
-    """Decides, per training step, which projection matrices to refresh."""
+    """Decides, per training step, which projection matrices to refresh.
 
-    def __init__(self, specs: List[LeafSpec], cfg: QGaLoreConfig):
-        self.cfg = cfg
+    Group-aware: every per-leaf policy knob (initial ``update_interval``,
+    ``adaptive`` on/off, ``cos_threshold`` / ``adaptive_k`` /
+    ``max_interval``) comes from the leaf's resolved param group
+    (``spec.cfg``, see ``repro.core.rules``) — an attention group can
+    refresh every 100 steps while an MLP group coasts at 400. ``cfg`` may
+    be a plain ``QGaLoreConfig`` (single group, pre-rules behavior) or a
+    ``ParamRules``."""
+
+    def __init__(self, specs: List[LeafSpec], cfg):
+        self.rules = as_rules(cfg)
+        self.cfg = self.rules.base
         self.specs = specs
         self.units: Dict[int, List[_Unit]] = {}
         for idx, spec in enumerate(specs):
             if spec.galore:
+                eff = _eff_cfg(spec, self.rules)
                 self.units[idx] = [
-                    _Unit(interval=cfg.update_interval)
+                    _Unit(interval=eff.update_interval)
                     for _ in range(spec.nbatch)
                 ]
+
+    def _cfg_for(self, idx: int) -> QGaLoreConfig:
+        return _eff_cfg(self.specs[idx], self.rules)
 
     # -- scheduling ---------------------------------------------------------
     def masks_for_step(self, step: int) -> Dict[int, np.ndarray]:
@@ -86,6 +100,7 @@ class SubspaceController:
             sim_arr = sims.get(path_by_idx[idx])
             if sim_arr is None:
                 continue
+            eff = self._cfg_for(idx)
             sim_arr = np.asarray(sim_arr).reshape(-1)
             for b, unit in enumerate(self.units[idx]):
                 if not mask[b]:
@@ -94,11 +109,11 @@ class SubspaceController:
                 s = float(sim_arr[b])
                 if s >= 0:
                     unit.sims.append(s)
-                    if self.cfg.adaptive and s >= self.cfg.cos_threshold:
+                    if eff.adaptive and s >= eff.cos_threshold:
                         unit.streak += 1
-                        if unit.streak >= self.cfg.adaptive_k:
+                        if unit.streak >= eff.adaptive_k:
                             unit.interval = min(unit.interval * 2,
-                                                self.cfg.max_interval)
+                                                eff.max_interval)
                             unit.streak = 0
                     else:
                         unit.streak = 0
@@ -109,10 +124,15 @@ class SubspaceController:
         return sum(u.svd_count for us in self.units.values() for u in us)
 
     def baseline_svd_count(self, steps: int) -> int:
-        """SVDs a fixed-interval GaLore would have used in `steps` steps."""
-        per_unit = 1 + (steps - 1) // self.cfg.update_interval if steps else 0
-        n_units = sum(len(us) for us in self.units.values())
-        return per_unit * n_units
+        """SVDs a fixed-interval GaLore would have used in `steps` steps
+        (per-group initial intervals honored)."""
+        if not steps:
+            return 0
+        total = 0
+        for idx, us in self.units.items():
+            t = self._cfg_for(idx).update_interval
+            total += (1 + (steps - 1) // t) * len(us)
+        return total
 
     def interval_summary(self) -> Dict[str, List[int]]:
         return {self.specs[i].path: [u.interval for u in us]

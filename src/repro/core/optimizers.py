@@ -45,29 +45,60 @@ def lr_at(step: int, cfg: TrainConfig) -> float:
 
 
 # ---------------------------------------------------------------------------
-# Baseline presets (paper Table 1 / Table 2 rows)
+# Baseline presets (paper Table 1 / Table 2 rows), expressed as rule-sets
 # ---------------------------------------------------------------------------
 
+# Each preset is one all-leaves override set — a degenerate rule-set with a
+# single (default) group. ``preset_rules`` returns the composable
+# ``ParamRules`` form that the new optimizer surface consumes; add groups
+# with ``dataclasses.replace(rules, groups=(...))`` or build ``ParamRules``
+# directly (see repro.core.rules / docs/optimizer_api.md).
+PRESET_OVERRIDES = {
+    "full": dict(enabled=False, adam_bits=32, weight_bits=0,
+                 stochastic_rounding=False),
+    "adamw": dict(enabled=False, adam_bits=32, weight_bits=0,
+                  stochastic_rounding=False),
+    "adam": dict(enabled=False, adam_bits=32, weight_bits=0,
+                 stochastic_rounding=False),
+    "adam8bit": dict(enabled=False, adam_bits=8, weight_bits=0,
+                     stochastic_rounding=False),
+    "galore": dict(enabled=True, adam_bits=32, weight_bits=0,
+                   proj_bits=32, stochastic_rounding=False, adaptive=False),
+    "galore8bit": dict(enabled=True, adam_bits=8, weight_bits=0,
+                       proj_bits=32, stochastic_rounding=False,
+                       adaptive=False),
+    "qgalore": dict(enabled=True, adam_bits=8, weight_bits=8,
+                    proj_bits=4, stochastic_rounding=True, adaptive=True),
+    "qgalore_nosr": dict(enabled=True, adam_bits=8, weight_bits=8,
+                         proj_bits=4, stochastic_rounding=False,
+                         adaptive=True),
+}
+
+
+def preset_rules(name: str, base: QGaLoreConfig = QGaLoreConfig(),
+                 groups=()):
+    """The preset as a composable rule-set: base config with the preset's
+    overrides applied, plus any caller-supplied ``ParamGroup``s (ordered,
+    first-match-wins). This is the preferred entry point for the new
+    optimizer API."""
+    from repro.core.rules import ParamRules
+    return ParamRules(base=preset(name, base), groups=tuple(groups))
+
+
 def preset(name: str, base: QGaLoreConfig = QGaLoreConfig()) -> QGaLoreConfig:
+    """Back-compat shim: the preset's base ``QGaLoreConfig``.
+
+    .. deprecated:: PR5
+        The optimizer surface is now rule-based — prefer
+        :func:`preset_rules` (or building ``repro.core.rules.ParamRules``
+        directly), which additionally expresses per-group overrides and
+        frozen groups. ``preset`` remains a thin wrapper over the same
+        override table (``PRESET_OVERRIDES``) and keeps returning exactly
+        the configs it always did, so existing tests / benches / examples
+        run unmodified.
+    """
     name = name.lower()
-    if name in ("full", "adamw", "adam"):
-        return replace(base, enabled=False, adam_bits=32, weight_bits=0,
-                       stochastic_rounding=False)
-    if name == "adam8bit":
-        return replace(base, enabled=False, adam_bits=8, weight_bits=0,
-                       stochastic_rounding=False)
-    if name == "galore":
-        return replace(base, enabled=True, adam_bits=32, weight_bits=0,
-                       proj_bits=32, stochastic_rounding=False,
-                       adaptive=False)
-    if name == "galore8bit":
-        return replace(base, enabled=True, adam_bits=8, weight_bits=0,
-                       proj_bits=32, stochastic_rounding=False,
-                       adaptive=False)
-    if name == "qgalore":
-        return replace(base, enabled=True, adam_bits=8, weight_bits=8,
-                       proj_bits=4, stochastic_rounding=True, adaptive=True)
-    if name == "qgalore_nosr":
-        return replace(base, enabled=True, adam_bits=8, weight_bits=8,
-                       proj_bits=4, stochastic_rounding=False, adaptive=True)
-    raise ValueError(f"unknown optimizer preset: {name}")
+    try:
+        return replace(base, **PRESET_OVERRIDES[name])
+    except KeyError:
+        raise ValueError(f"unknown optimizer preset: {name}") from None

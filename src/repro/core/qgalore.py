@@ -61,6 +61,7 @@ from repro.config import QGaLoreConfig
 from repro.core import adam8bit, projector, quant
 from repro.core.adam8bit import Adam8bitState, AdamHyper
 from repro.core.quant import QTensor
+from repro.core.rules import as_rules
 from repro.kernels import ops as kernel_ops
 
 
@@ -76,6 +77,13 @@ class LeafSpec:
     side: str                     # "left" | "right" | ""
     rank: int
     batch: Tuple[int, ...]        # leading dims (layer stacks / experts)
+    # --- param-group resolution (repro.core.rules) ---
+    frozen: bool = False          # dropped from the optimizer entirely
+    lr_scale: float = 1.0         # per-group learning-rate multiplier
+    group: str = "default"        # name of the resolved ParamGroup
+    # effective per-leaf recipe (base config + group overrides); None only
+    # for specs built outside leaf_specs (tests constructing LeafSpec raw)
+    cfg: Optional[QGaLoreConfig] = None
 
     @property
     def mat_shape(self) -> Tuple[int, int]:
@@ -104,29 +112,55 @@ def _is_embedding_path(path: str) -> bool:
     return any(k in p for k in ("embed", "lm_head", "unembed", "wte", "wpe"))
 
 
-def leaf_specs(params, cfg: QGaLoreConfig) -> List[LeafSpec]:
-    """One spec per leaf, in tree_flatten order (QTensor = one leaf)."""
+def leaf_specs(params, cfg) -> List[LeafSpec]:
+    """One spec per leaf, in tree_flatten order (QTensor = one leaf).
+
+    ``cfg`` may be a plain ``QGaLoreConfig`` (single default group — the
+    pre-rules behavior, bit-identical) or a ``ParamRules``: each leaf path
+    is resolved to its first-matching group, whose overrides produce the
+    per-leaf effective config stored on ``spec.cfg`` and consulted by every
+    downstream consumer (init/update, adaptive controller, sharding,
+    memory report). Frozen-group leaves get ``frozen=True``, never GaLore,
+    and hold no optimizer state.
+    """
+    rules = as_rules(cfg)
     flat = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=quant.is_qtensor)[0]
     specs = []
     for path, leaf in flat:
         pstr = jax.tree_util.keystr(path)
         shape = _leaf_shape(leaf)
+        grp = rules.resolve(pstr)
+        eff = grp.apply_to(rules.base)
         galore = (
-            cfg.enabled
+            not grp.frozen
+            and eff.enabled
             and len(shape) >= 2
-            and shape[-1] >= cfg.min_dim
-            and shape[-2] >= cfg.min_dim
-            and (cfg.galore_embeddings or not _is_embedding_path(pstr))
+            and shape[-1] >= eff.min_dim
+            and shape[-2] >= eff.min_dim
+            and (eff.galore_embeddings or not _is_embedding_path(pstr))
         )
         if galore:
             side = projector.galore_side(shape)
-            rank = min(cfg.rank, min(shape[-2], shape[-1]))
+            rank = min(eff.rank, min(shape[-2], shape[-1]))
             specs.append(LeafSpec(pstr, shape, True, side, rank,
-                                  tuple(shape[:-2])))
+                                  tuple(shape[:-2]), frozen=False,
+                                  lr_scale=grp.lr_scale, group=grp.name,
+                                  cfg=eff))
         else:
-            specs.append(LeafSpec(pstr, shape, False, "", 0, ()))
+            specs.append(LeafSpec(pstr, shape, False, "", 0, (),
+                                  frozen=grp.frozen,
+                                  lr_scale=grp.lr_scale, group=grp.name,
+                                  cfg=eff))
     return specs
+
+
+def _eff_cfg(spec: LeafSpec, cfg) -> QGaLoreConfig:
+    """The per-leaf effective config (spec.cfg), falling back to the global
+    base for specs constructed without rules resolution."""
+    if spec.cfg is not None:
+        return spec.cfg
+    return as_rules(cfg).base
 
 
 # ---------------------------------------------------------------------------
@@ -134,14 +168,18 @@ def leaf_specs(params, cfg: QGaLoreConfig) -> List[LeafSpec]:
 # ---------------------------------------------------------------------------
 
 class QGaLoreState(NamedTuple):
-    inner: Any        # pytree of Adam8bitState (aligned with params leaves)
+    inner: Any        # pytree of Adam8bitState (None for frozen leaves)
     proj: Any         # pytree: QTensor P per galore leaf, None otherwise
     count: jax.Array  # int32 scalar
 
 
+def _is_inner_leaf(x) -> bool:
+    """is_leaf for flattening ``state.inner`` — frozen leaves hold None."""
+    return isinstance(x, Adam8bitState) or x is None
+
+
 def _hyper(cfg: QGaLoreConfig) -> AdamHyper:
-    return AdamHyper(cfg.beta1, cfg.beta2, cfg.eps, cfg.adam_bits,
-                     cfg.quant_block)
+    return AdamHyper.from_config(cfg)
 
 
 def _init_projection(spec: LeafSpec, cfg: QGaLoreConfig, key) -> Any:
@@ -154,19 +192,25 @@ def _init_projection(spec: LeafSpec, cfg: QGaLoreConfig, key) -> Any:
     return projector.quantize_projection(q, cfg.proj_bits, cfg.quant_block)
 
 
-def init(params, cfg: QGaLoreConfig, key=None) -> QGaLoreState:
+def init(params, cfg, key=None, specs: Optional[List[LeafSpec]] = None
+         ) -> QGaLoreState:
+    """Build the optimizer state. ``cfg``: QGaLoreConfig or ParamRules.
+    Frozen-group leaves hold NO state (None inner, None projection)."""
     key = jax.random.PRNGKey(0) if key is None else key
-    specs = leaf_specs(params, cfg)
+    specs = specs or leaf_specs(params, cfg)
     flat, treedef = jax.tree_util.tree_flatten(params,
                                                is_leaf=quant.is_qtensor)
-    hyper = _hyper(cfg)
     inner, proj = [], []
     for i, (leaf, spec) in enumerate(zip(flat, specs)):
-        if spec.galore:
-            inner.append(adam8bit.init_state(spec.low_shape, hyper))
-            proj.append(_init_projection(spec, cfg, jax.random.fold_in(key, i)))
+        eff = _eff_cfg(spec, cfg)
+        if spec.frozen:
+            inner.append(None)
+            proj.append(None)
+        elif spec.galore:
+            inner.append(adam8bit.init_state(spec.low_shape, _hyper(eff)))
+            proj.append(_init_projection(spec, eff, jax.random.fold_in(key, i)))
         else:
-            inner.append(adam8bit.init_state(spec.shape, hyper))
+            inner.append(adam8bit.init_state(spec.shape, _hyper(eff)))
             proj.append(None)
     return QGaLoreState(
         inner=jax.tree_util.tree_unflatten(treedef, inner),
@@ -421,10 +465,27 @@ def _leaf_sig(x):
     return ("arr", tuple(x.shape), str(x.dtype))
 
 
-def _group_sig(param, grad, inner, P, spec: LeafSpec):
+def _shard_sig(sh):
+    """Hashable signature of a (possibly nested) sharding pytree leaf —
+    leaves with different layouts must not share one scanned program, or
+    GSPMD rematerializes the whole stack to a common layout (the noisy
+    "involuntary full rematerialization" warnings)."""
+    if sh is None:
+        return None
+    return tuple(
+        str(getattr(s, "spec", s))
+        for s in jax.tree_util.tree_leaves(
+            sh, is_leaf=lambda x: x is None))
+
+
+def _group_sig(param, grad, inner, P, spec: LeafSpec, shard=None):
+    # spec.cfg (the per-group effective recipe) and lr_scale are part of
+    # the signature: same-signature-same-group leaves still scan as one
+    # program, while leaves from different param groups never share one.
     return (spec.shape, spec.galore, spec.side, spec.rank, spec.batch,
+            spec.cfg, spec.lr_scale,
             _leaf_sig(param), _leaf_sig(grad), _leaf_sig(inner),
-            _leaf_sig(P))
+            _leaf_sig(P), _shard_sig(shard))
 
 
 def _stack_leaves(leaves):
@@ -437,13 +498,38 @@ def _unstack_leaf(stacked, j):
     return jax.tree_util.tree_map(lambda x: x[j], stacked)
 
 
+def _constrain_stacked(tree, shard_tree):
+    """Annotate a stacked (leading group axis) pytree with the per-leaf
+    sharding extended by a replicated group dim. Enriching the scan xs/ys
+    this way keeps GSPMD from involuntarily rematerializing the stacked
+    operands to a common layout inside the batched-leaf scan (ZeRO-sharded
+    runs; see ROADMAP). No-op outside mesh contexts (``shard_tree=None``)."""
+    if shard_tree is None or tree is None:
+        return tree
+
+    def one(x, s):
+        if x is None or not isinstance(s, jax.sharding.NamedSharding):
+            return x
+        if len(s.spec) > x.ndim - 1:
+            return x
+        ext = jax.sharding.NamedSharding(
+            s.mesh, jax.sharding.PartitionSpec(None, *s.spec))
+        return jax.lax.with_sharding_constraint(x, ext)
+
+    return jax.tree_util.tree_map(one, tree, shard_tree,
+                                  is_leaf=lambda x: x is None)
+
+
 def _run_group(idxs, p_flat, g_flat, i_flat, pr_flat, spec: LeafSpec,
-               cfg: QGaLoreConfig, lr, count, rng):
+               cfg: QGaLoreConfig, lr, count, rng, shard=None):
     """Update a group of same-signature leaves with one scanned program.
 
     Per-leaf RNG keys are folded from the ORIGINAL leaf indices, so the
     result is bit-identical to running the leaves through the Python loop.
-    Returns {idx: (new_param, new_inner, new_P)}.
+    ``shard``: optional (param, inner, proj) shardings shared by every leaf
+    of the group (the group signature includes the layout) — used to
+    annotate the stacked scan operands. Returns
+    {idx: (new_param, new_inner, new_P)}.
     """
     keys = jnp.stack([jax.random.fold_in(rng, i) for i in idxs])
     p_s = _stack_leaves([p_flat[i] for i in idxs])
@@ -451,6 +537,12 @@ def _run_group(idxs, p_flat, g_flat, i_flat, pr_flat, spec: LeafSpec,
     i_s = _stack_leaves([i_flat[i] for i in idxs])
     has_proj = pr_flat[idxs[0]] is not None
     pr_s = _stack_leaves([pr_flat[i] for i in idxs]) if has_proj else None
+    if shard is not None:
+        p_sh, i_sh, pr_sh = shard
+        p_s = _constrain_stacked(p_s, p_sh)
+        i_s = _constrain_stacked(i_s, i_sh)
+        if has_proj:
+            pr_s = _constrain_stacked(pr_s, pr_sh)
 
     def body(carry, inp):
         if has_proj:
@@ -467,6 +559,9 @@ def _run_group(idxs, p_flat, g_flat, i_flat, pr_flat, spec: LeafSpec,
 
     xs = (p_s, g_s, i_s, pr_s, keys) if has_proj else (p_s, g_s, i_s, keys)
     _, outs = jax.lax.scan(body, 0, xs)
+    if shard is not None:
+        outs = (_constrain_stacked(outs[0], p_sh),
+                _constrain_stacked(outs[1], i_sh))
     results = {}
     for j, idx in enumerate(idxs):
         np_ = _unstack_leaf(outs[0], j)
@@ -475,18 +570,33 @@ def _run_group(idxs, p_flat, g_flat, i_flat, pr_flat, spec: LeafSpec,
     return results
 
 
+def _lr_for(spec: LeafSpec, lr):
+    """Per-group learning rate; the multiply is skipped for the unit scale
+    so default single-group rules stay bit-identical."""
+    return lr if spec.lr_scale == 1.0 else lr * spec.lr_scale
+
+
 def apply_updates(
     params,
     grads,
     state: QGaLoreState,
-    cfg: QGaLoreConfig,
+    cfg,
     lr,
     rng,
     refresh_masks: Optional[Dict[int, jax.Array]] = None,
     refresh: bool = False,
     specs: Optional[List[LeafSpec]] = None,
+    shardings=None,
 ):
     """One optimizer step (pure; jit with ``refresh`` static).
+
+    ``cfg`` may be a plain ``QGaLoreConfig`` or a ``ParamRules``: each
+    leaf's recipe (rank / bits / scale / lr multiplier) comes from its
+    resolved param group (``spec.cfg``); frozen-group leaves pass through
+    untouched and hold no state. This function is the fused/batched
+    executor of the canonical transform chain
+    (``repro.core.transform.qgalore_transform``) — the stage-by-stage
+    reference composition lives in ``repro.core.transform``.
 
     ``grads`` leaves may be full-rank or low-rank (see module docstring).
     ``refresh_masks``: {leaf_index: (nbatch,) bool} for galore leaves due for
@@ -495,47 +605,74 @@ def apply_updates(
 
     Leaves are not updated one-by-one: with ``cfg.batch_leaves`` (default)
     all leaves sharing an update signature (shape / side / rank /
-    quantization layout) are stacked and driven by one ``lax.scan``, and
-    with ``cfg.fused_update`` (default) each eligible leaf's Adam +
-    back-projection + SR requant runs as one fused kernel. Neither changes
-    the numbers — per-leaf RNG folding is preserved.
+    quantization layout / param group) are stacked and driven by one
+    ``lax.scan``, and with ``cfg.fused_update`` (default) each eligible
+    leaf's Adam + back-projection + SR requant runs as one fused kernel.
+    Neither changes the numbers — per-leaf RNG folding is preserved.
+
+    ``shardings``: optional ``(param_shardings, QGaLoreState shardings)``
+    pair (mesh runs) — layouts join the batching signature and annotate the
+    scanned stacks, which quiets GSPMD's involuntary-rematerialization
+    warnings in ZeRO-sharded runs.
 
     Returns (new_params, new_state, metrics).
     """
-    specs = specs or leaf_specs(params, cfg)
+    rules = as_rules(cfg)
+    base = rules.base
+    specs = specs or leaf_specs(params, rules)
     p_flat, treedef = jax.tree_util.tree_flatten(params,
                                                  is_leaf=quant.is_qtensor)
     g_flat = jax.tree_util.tree_flatten(grads, is_leaf=quant.is_qtensor)[0]
-    i_flat = jax.tree_util.tree_flatten(
-        state.inner, is_leaf=lambda x: isinstance(x, Adam8bitState))[0]
+    i_flat = jax.tree_util.tree_flatten(state.inner,
+                                        is_leaf=_is_inner_leaf)[0]
     pr_flat = jax.tree_util.tree_flatten(
         state.proj, is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
+    psh_flat = ish_flat = prsh_flat = None
+    if shardings is not None:
+        param_sh, opt_sh = shardings
+        psh_flat = jax.tree_util.tree_flatten(
+            param_sh, is_leaf=quant.is_qtensor)[0]
+        ish_flat = jax.tree_util.tree_flatten(
+            opt_sh.inner, is_leaf=_is_inner_leaf)[0]
+        prsh_flat = jax.tree_util.tree_flatten(
+            opt_sh.proj,
+            is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
     count = state.count + 1
 
     sims_out: Dict[str, jax.Array] = {}
     refresh_masks = refresh_masks or {}
     n_leaves = len(p_flat)
 
-    # Partition: leaves due for refresh (or with grouping off) run singly;
-    # the rest are grouped by their update signature.
+    # Partition: frozen leaves pass through; leaves due for refresh (or
+    # with grouping off) run singly; the rest are grouped by signature.
     groups: Dict[Any, List[int]] = {}
     singles: List[int] = []
+    results: Dict[int, tuple] = {}
     for idx, spec in enumerate(specs):
+        if spec.frozen:
+            results[idx] = (p_flat[idx], i_flat[idx], pr_flat[idx])
+            continue
         do_refresh = refresh and spec.galore and idx in refresh_masks
-        if do_refresh or not cfg.batch_leaves:
+        if do_refresh or not base.batch_leaves:
             singles.append(idx)
         else:
             sig = _group_sig(p_flat[idx], g_flat[idx], i_flat[idx],
-                             pr_flat[idx], spec)
+                             pr_flat[idx], spec,
+                             None if psh_flat is None else
+                             (psh_flat[idx], ish_flat[idx], prsh_flat[idx]))
             groups.setdefault(sig, []).append(idx)
 
-    results: Dict[int, tuple] = {}
     for sig, idxs in groups.items():
         if len(idxs) == 1:
             singles.append(idxs[0])
             continue
+        spec0 = specs[idxs[0]]
+        shard = None if psh_flat is None else \
+            (psh_flat[idxs[0]], ish_flat[idxs[0]], prsh_flat[idxs[0]])
         results.update(_run_group(idxs, p_flat, g_flat, i_flat, pr_flat,
-                                  specs[idxs[0]], cfg, lr, count, rng))
+                                  spec0, _eff_cfg(spec0, rules),
+                                  _lr_for(spec0, lr), count, rng,
+                                  shard=shard))
 
     for idx in singles:
         param, grad, inner, P, spec = (p_flat[idx], g_flat[idx],
@@ -547,8 +684,8 @@ def apply_updates(
         if do_refresh and mask is None:
             mask = jnp.ones((spec.nbatch,), bool)
         np_, ni_, npr_, sims = _update_leaf(
-            param, grad, inner, P, spec, cfg, lr, count, mask, key,
-            do_refresh)
+            param, grad, inner, P, spec, _eff_cfg(spec, rules),
+            _lr_for(spec, lr), count, mask, key, do_refresh)
         results[idx] = (np_, ni_, npr_)
         if sims is not None:
             sims_out[spec.path] = sims
@@ -571,31 +708,38 @@ def apply_updates(
 # Memory model (paper Tables 1/2, Fig. 5)
 # ---------------------------------------------------------------------------
 
-def memory_report(params, cfg: QGaLoreConfig,
-                  fp_state_bytes: int = 2) -> Dict[str, float]:
+def memory_report(params, cfg, fp_state_bytes: int = 2) -> Dict[str, float]:
     """Analytic bytes for weights + optimizer states (the paper's 'estimated
     memory' columns count exactly these). Non-quantized Adam states are
-    counted at BF16 (paper's baseline convention); pass 4 for true FP32."""
-    specs = leaf_specs(params, cfg)
+    counted at BF16 (paper's baseline convention); pass 4 for true FP32.
+
+    Group-aware: per-leaf ranks/bits come from the resolved param group and
+    frozen-group leaves contribute their weights but ZERO optimizer bytes —
+    this is what the fine-tune entrypoint compares against QLoRA."""
+    rules = as_rules(cfg)
+    specs = leaf_specs(params, rules)
     flat = jax.tree_util.tree_flatten(params, is_leaf=quant.is_qtensor)[0]
     w_bytes = opt_bytes = proj_bytes = 0
     for leaf, spec in zip(flat, specs):
+        eff = _eff_cfg(spec, rules)
         n = int(np.prod(spec.shape))
         if quant.is_qtensor(leaf):
             w_bytes += leaf.nbytes()
         else:
             w_bytes += n * min(leaf.dtype.itemsize, 2)   # bf16 weights
+        if spec.frozen:
+            continue                                     # no optimizer state
         state_elems = int(np.prod(spec.low_shape)) if spec.galore else n
-        bytes_per = 1 if cfg.adam_bits == 8 else fp_state_bytes
+        bytes_per = 1 if eff.adam_bits == 8 else fp_state_bytes
         opt_bytes += 2 * state_elems * bytes_per          # m and v
-        if cfg.adam_bits == 8:
-            opt_bytes += 2 * (state_elems // cfg.quant_block + 1) * 8
+        if eff.adam_bits == 8:
+            opt_bytes += 2 * (state_elems // eff.quant_block + 1) * 8
         if spec.galore:
             d = projector.proj_dim(spec.mat_shape) * spec.rank * spec.nbatch
-            if cfg.proj_bits >= 16:
+            if eff.proj_bits >= 16:
                 proj_bytes += d * 4
             else:
-                proj_bytes += d * cfg.proj_bits // 8
+                proj_bytes += d * eff.proj_bits // 8
     return {
         "weights_gb": w_bytes / 2**30,
         "optimizer_gb": (opt_bytes + proj_bytes) / 2**30,

@@ -1,0 +1,440 @@
+"""Optax-style gradient-transformation chain over the Q-GaLore recipe.
+
+The optimizer's public surface is a :class:`GradientTransformation` —
+``init``/``update`` pair — built by composing named stages::
+
+    tx = chain(
+        clip_global_norm(1.0),
+        project(rules),          # GaLore: full-rank grad -> rank-r subspace
+        quantized_adam(rules),   # 8-bit Adam on the low-rank statistics
+        backproject(rules),      # subspace direction -> full-rank update
+        sr_requant(rules),       # SR INT8 weight write (+ weight decay)
+    )
+    state = tx.init(params, key)
+    new_params, state, metrics = tx.update(grads, state, params,
+                                           lr=1e-3, rng=key)
+
+Unlike optax, ``update`` returns the **new params**, not additive updates:
+Q-GaLore's weights are blockwise-INT8 ``QTensor``s whose update IS a
+stochastic-rounding requantization — there is no full-precision weight to
+add a delta to. Stages communicate through a per-call context (the
+projection chosen by ``project`` is what ``backproject`` inverts), so the
+chain stays a flat, ordered list like optax's while still expressing the
+projected-update sandwich.
+
+Param groups (``repro.core.rules``) thread through every stage: each leaf
+uses its resolved per-group recipe (rank / bits / scale / lr multiplier),
+and frozen-group leaves pass through all stages untouched with no state.
+
+The canonical pre-built chain is :func:`qgalore_transform` — today's
+``qgalore.init`` / ``qgalore.apply_updates`` monolith is its fused/batched
+executor (one fused kernel per eligible leaf, same-signature leaves
+scanned as one program). Under default single-group rules it is
+bit-identical to the pre-redesign optimizer (the golden-trajectory harness
+enforces this), and the stage-by-stage composition above reproduces it
+exactly with the fusion/batching strategy flags off
+(``tests/test_rules.py::TestTransformParity``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import adam8bit, projector, qgalore, quant
+from repro.core.qgalore import LeafSpec, _eff_cfg, _hyper
+from repro.core.rules import ParamRules, as_rules
+
+
+class GradientTransformation(NamedTuple):
+    """``init(params, key=None, specs=None) -> state`` and
+    ``update(grads, state, params, *, lr, rng, refresh_masks=None,
+    refresh=False, specs=None, shardings=None) ->
+    (new_params, new_state, metrics)``."""
+    init: Callable
+    update: Callable
+
+
+class Stage(NamedTuple):
+    """One chain stage. ``init(params_flat, specs, rules, key) -> state``;
+    ``apply(ctx, vals, state) -> (vals, new_state)`` where ``vals`` is the
+    flat per-leaf value list flowing down the chain (grads -> low-rank
+    grads -> Adam directions -> full-rank updates -> new params)."""
+    name: str
+    rules: Optional[ParamRules]
+    init: Callable
+    apply: Callable
+
+
+class ChainState(NamedTuple):
+    stages: Tuple[Any, ...]
+    count: jax.Array
+
+
+class _Ctx:
+    """Per-update scratch shared by the stages of one chain invocation."""
+
+    def __init__(self, params_flat, specs, rules, lr, rng, count,
+                 refresh, refresh_masks):
+        self.params_flat = params_flat
+        self.specs = specs
+        self.rules = rules
+        self.lr = lr
+        self.rng = rng
+        self.count = count
+        self.refresh = refresh
+        self.refresh_masks = refresh_masks or {}
+        self.metrics: Dict[str, Any] = {}
+        self.proj: Optional[List] = None     # written by project()
+
+    def key(self, idx: int):
+        # identical folding to the monolith: one key per ORIGINAL leaf
+        # index, shared by the refresh SVD and the SR requant draw
+        return jax.random.fold_in(self.rng, idx)
+
+    def lr_for(self, spec: LeafSpec):
+        return qgalore._lr_for(spec, self.lr)
+
+
+def _noop_init(params_flat, specs, rules, key):
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Global-norm clipping (also used directly by the train step)
+# ---------------------------------------------------------------------------
+
+def global_norm(grads) -> jax.Array:
+    leaves = [g for g in jax.tree_util.tree_leaves(grads)
+              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype,
+                                                        jnp.floating)]
+    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm,
+                        specs: Optional[List[LeafSpec]] = None):
+    """Clip to ``max_norm`` (no-op when falsy), returning
+    ``(clipped, norm)``. With ``specs``, frozen-group leaves neither enter
+    the norm nor get scaled — their gradients are discarded downstream, so
+    letting them inflate the norm would silently damp every trainable
+    leaf's update."""
+    frozen = {i for i, s in enumerate(specs or []) if s.frozen}
+    flat, treedef = jax.tree_util.tree_flatten(
+        grads, is_leaf=quant.is_qtensor)
+    norm = global_norm([g for i, g in enumerate(flat) if i not in frozen])
+    if not max_norm:
+        return grads, norm
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
+    out = [g if i in frozen
+           else ((g * scale).astype(g.dtype)
+                 if hasattr(g, "dtype")
+                 and jnp.issubdtype(g.dtype, jnp.floating) else g)
+           for i, g in enumerate(flat)]
+    return jax.tree_util.tree_unflatten(treedef, out), norm
+
+
+def clip_global_norm(max_norm) -> Stage:
+    """Stage form of :func:`clip_by_global_norm` (put it first) — one
+    implementation, the stage just adapts the flat value list."""
+
+    def apply(ctx: _Ctx, vals, _state):
+        out, norm = clip_by_global_norm(list(vals), max_norm,
+                                        specs=ctx.specs)
+        ctx.metrics["grad_norm"] = norm
+        return out, None
+
+    return Stage("clip_global_norm", None, _noop_init, apply)
+
+
+# ---------------------------------------------------------------------------
+# The four core stages
+# ---------------------------------------------------------------------------
+
+def project(cfg_or_rules) -> Stage:
+    """GaLore projection: owns the per-leaf projection matrices P (INT4
+    ``QTensor``s under the paper recipe) and, at refresh steps, the
+    mask-gated in-graph SVD. Emits low-rank gradients for galore leaves
+    (passthrough for everything else, including grads that already arrive
+    low-rank from the fused backward)."""
+    rules = as_rules(cfg_or_rules)
+
+    def init(params_flat, specs, rules_, key):
+        key = jax.random.PRNGKey(0) if key is None else key
+        out = []
+        for i, spec in enumerate(specs):
+            if spec.galore:
+                out.append(qgalore._init_projection(
+                    spec, _eff_cfg(spec, rules_),
+                    jax.random.fold_in(key, i)))
+            else:
+                out.append(None)
+        return out
+
+    def apply(ctx: _Ctx, vals, P_flat):
+        new_P = list(P_flat)
+        out = list(vals)
+        for idx, spec in enumerate(ctx.specs):
+            if spec.frozen or not spec.galore:
+                continue
+            eff = _eff_cfg(spec, ctx.rules)
+            g = vals[idx]
+            P = P_flat[idx]
+            key = ctx.key(idx)
+            if ctx.refresh and idx in ctx.refresh_masks:
+                if qgalore._grad_is_lowrank(g, spec):
+                    raise ValueError(
+                        f"refresh step needs full-rank grad for {spec.path}")
+                mask = ctx.refresh_masks[idx]
+                if mask is None:
+                    mask = jnp.ones((spec.nbatch,), bool)
+                P, sims = qgalore._refresh_leaf(g, P, mask, spec, eff, key)
+                ctx.metrics.setdefault("sims", {})[spec.path] = sims
+            new_P[idx] = P
+            if qgalore._grad_is_lowrank(g, spec):
+                out[idx] = g.astype(jnp.float32)
+            else:
+                P_deq = projector.maybe_dequantize(P, jnp.float32)
+                out[idx] = projector.project(g.astype(jnp.float32), P_deq,
+                                             spec.side)
+        ctx.proj = new_P
+        return out, new_P
+
+    return Stage("project", rules, init, apply)
+
+
+def quantized_adam(cfg_or_rules) -> Stage:
+    """8-bit Adam on the (low-rank, for galore leaves) gradient statistics.
+    Owns the blockwise-INT8 moment pairs; emits bias-corrected directions.
+    Per-group ``adam_bits`` selects fp32 moments instead."""
+    rules = as_rules(cfg_or_rules)
+
+    def init(params_flat, specs, rules_, key):
+        out = []
+        for spec in specs:
+            if spec.frozen:
+                out.append(None)
+            else:
+                shape = spec.low_shape if spec.galore else spec.shape
+                out.append(adam8bit.init_state(
+                    shape, _hyper(_eff_cfg(spec, rules_))))
+        return out
+
+    def apply(ctx: _Ctx, vals, inner_flat):
+        out = list(vals)
+        new_inner = list(inner_flat)
+        for idx, spec in enumerate(ctx.specs):
+            if spec.frozen:
+                continue
+            eff = _eff_cfg(spec, ctx.rules)
+            direction, st = adam8bit.update(
+                vals[idx].astype(jnp.float32), inner_flat[idx], ctx.count,
+                _hyper(eff))
+            out[idx] = direction
+            new_inner[idx] = st
+        return out, new_inner
+
+    return Stage("quantized_adam", rules, init, apply)
+
+
+def backproject(cfg_or_rules) -> Stage:
+    """Map subspace directions back to full-rank updates with the SAME P
+    the ``project`` stage used this step, scaled by the per-group GaLore
+    alpha. Stacked leaves scan the back-projection over the layer axis
+    (bounded full-rank transients, mirroring the monolith)."""
+    rules = as_rules(cfg_or_rules)
+
+    def apply(ctx: _Ctx, vals, _state):
+        if ctx.proj is None:
+            raise ValueError("backproject() requires a project() stage "
+                             "earlier in the chain")
+        out = list(vals)
+        for idx, spec in enumerate(ctx.specs):
+            if spec.frozen or not spec.galore:
+                continue
+            eff = _eff_cfg(spec, ctx.rules)
+            P = ctx.proj[idx]
+            direction = vals[idx]
+            if spec.batch:
+                b = spec.nbatch
+                nlead = len(spec.batch)
+                P_f = jax.tree_util.tree_map(
+                    lambda x: x.reshape((b,) + x.shape[nlead:]), P)
+                d_f = direction.reshape((b,) + direction.shape[nlead:])
+
+                def body(carry, inp, _side=spec.side, _scale=eff.scale):
+                    d_l, P_l = inp
+                    P_deq = projector.maybe_dequantize(P_l, jnp.float32)
+                    upd = _scale * projector.project_back(
+                        d_l.astype(jnp.float32), P_deq, _side)
+                    return carry, upd
+
+                _, upd_f = jax.lax.scan(body, 0, (d_f, P_f))
+                out[idx] = upd_f.reshape(spec.shape)
+            else:
+                P_deq = projector.maybe_dequantize(P, jnp.float32)
+                out[idx] = eff.scale * projector.project_back(
+                    direction.astype(jnp.float32), P_deq, spec.side)
+        return out, None
+
+    return Stage("backproject", rules, _noop_init, apply)
+
+
+def sr_requant(cfg_or_rules) -> Stage:
+    """Terminal stage: apply ``-lr * update`` to the weights. INT8
+    ``QTensor`` weights are rewritten by stochastic-rounding requantization
+    (per-group ``stochastic_rounding`` / round-to-nearest); float weights
+    get the plain subtraction. Honors the per-group ``weight_decay`` and
+    learning-rate multiplier. The chain's value list becomes the new
+    params."""
+    rules = as_rules(cfg_or_rules)
+
+    def apply(ctx: _Ctx, vals, _state):
+        out = []
+        for idx, spec in enumerate(ctx.specs):
+            param = ctx.params_flat[idx]
+            if spec.frozen:
+                out.append(param)
+                continue
+            eff = _eff_cfg(spec, ctx.rules)
+            upd = vals[idx]
+            lr_eff = ctx.lr_for(spec)
+            key = ctx.key(idx)
+            if spec.galore and spec.batch:
+                # per-layer scan with the monolith's per-layer key folding
+                b = spec.nbatch
+                nlead = len(spec.batch)
+                param_f = jax.tree_util.tree_map(
+                    lambda x: x.reshape((b,) + x.shape[nlead:]), param)
+                upd_f = upd.reshape((b,) + upd.shape[nlead:])
+
+                def body(carry, inp, _spec=spec, _eff=eff, _lr=lr_eff,
+                         _key=key):
+                    p_l, u_l, i = inp
+                    newp = qgalore._apply_weight_update(
+                        p_l, u_l, None, _spec, _eff, _lr,
+                        jax.random.fold_in(_key, i))
+                    return carry, newp
+
+                _, newp_f = jax.lax.scan(
+                    body, 0, (param_f, upd_f, jnp.arange(b)))
+                out.append(jax.tree_util.tree_map(
+                    lambda x, ref: x.reshape(ref.shape), newp_f, param))
+            else:
+                out.append(qgalore._apply_weight_update(
+                    param, upd, None, spec, eff, lr_eff, key))
+        return out, None
+
+    return Stage("sr_requant", rules, _noop_init, apply)
+
+
+def add_weight_decay(wd: Optional[float] = None) -> Stage:
+    """Explicit decoupled weight-decay stage (adds ``wd * W`` to the update
+    before ``sr_requant``). NOTE: ``sr_requant`` already honors the
+    per-group ``cfg.weight_decay`` — use this stage only for chains whose
+    configs keep ``weight_decay=0`` (e.g. to decay just one group, or to
+    decay before clipping)."""
+
+    def apply(ctx: _Ctx, vals, _state):
+        out = list(vals)
+        for idx, spec in enumerate(ctx.specs):
+            if spec.frozen:
+                continue
+            eff = _eff_cfg(spec, ctx.rules)
+            decay = eff.weight_decay if wd is None else wd
+            if not decay:
+                continue
+            param = ctx.params_flat[idx]
+            w = quant.dequantize(param, jnp.float32) \
+                if quant.is_qtensor(param) else param.astype(jnp.float32)
+            out[idx] = vals[idx].astype(jnp.float32) + decay * w
+        return out, None
+
+    return Stage("add_weight_decay", None, _noop_init, apply)
+
+
+# ---------------------------------------------------------------------------
+# Chain combinator
+# ---------------------------------------------------------------------------
+
+def chain(*stages: Stage, rules=None) -> GradientTransformation:
+    """Compose stages into one transformation (optax ``chain`` analogue).
+    ``rules`` defaults to the first stage that carries one."""
+    if rules is None:
+        for s in stages:
+            if s.rules is not None:
+                rules = s.rules
+                break
+    if rules is None:
+        raise ValueError("chain() needs rules — pass rules= or include a "
+                         "stage built from a config/rule-set")
+    rules = as_rules(rules)
+
+    def init(params, key=None, specs=None):
+        specs = specs or qgalore.leaf_specs(params, rules)
+        params_flat = jax.tree_util.tree_flatten(
+            params, is_leaf=quant.is_qtensor)[0]
+        return ChainState(
+            stages=tuple(s.init(params_flat, specs, rules, key)
+                         for s in stages),
+            count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state: ChainState, params, *, lr, rng,
+               refresh_masks=None, refresh: bool = False, specs=None,
+               shardings=None):
+        del shardings    # layout hints only apply to the fused executor
+        specs = specs or qgalore.leaf_specs(params, rules)
+        params_flat, treedef = jax.tree_util.tree_flatten(
+            params, is_leaf=quant.is_qtensor)
+        vals = jax.tree_util.tree_flatten(
+            grads, is_leaf=quant.is_qtensor)[0]
+        count = state.count + 1
+        ctx = _Ctx(params_flat, specs, rules, lr, rng, count, refresh,
+                   refresh_masks)
+        new_states = []
+        for s, st in zip(stages, state.stages):
+            vals, st = s.apply(ctx, vals, st)
+            new_states.append(st)
+        new_params = jax.tree_util.tree_unflatten(treedef, vals)
+        return new_params, ChainState(tuple(new_states), count), ctx.metrics
+
+    return GradientTransformation(init, update)
+
+
+# ---------------------------------------------------------------------------
+# The canonical pre-built chain
+# ---------------------------------------------------------------------------
+
+def qgalore_reference_chain(cfg_or_rules) -> GradientTransformation:
+    """The canonical four stages composed literally — the unfused,
+    per-leaf reference. Matches the fused executor bit-for-bit when the
+    strategy flags (``fused_update`` / ``batch_leaves``) are off, and to
+    within one INT8 quantum otherwise."""
+    rules = as_rules(cfg_or_rules)
+    return chain(project(rules), quantized_adam(rules), backproject(rules),
+                 sr_requant(rules), rules=rules)
+
+
+def qgalore_transform(cfg_or_rules, specs=None) -> GradientTransformation:
+    """The canonical Q-GaLore transformation: semantically the
+    ``project → quantized_adam → backproject → sr_requant`` chain, executed
+    by the fused/batched monolith (``qgalore.apply_updates``) — eligible
+    leaves run Adam + INT4 back-projection + SR requant as ONE kernel and
+    same-signature leaves scan as one program. State is a plain
+    ``QGaLoreState`` (checkpoint / ZeRO-sharding compatible). This is what
+    the production train step uses."""
+    rules = as_rules(cfg_or_rules)
+    _specs = specs
+
+    def init(params, key=None, specs=None):
+        return qgalore.init(params, rules, key, specs=specs or _specs)
+
+    def update(grads, state, params, *, lr, rng, refresh_masks=None,
+               refresh: bool = False, specs=None, shardings=None):
+        return qgalore.apply_updates(
+            params, grads, state, rules, lr=lr, rng=rng,
+            refresh_masks=refresh_masks, refresh=refresh,
+            specs=specs or _specs, shardings=shardings)
+
+    return GradientTransformation(init, update)

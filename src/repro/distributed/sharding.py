@@ -233,9 +233,13 @@ def zero_axes_for(mesh: Mesh) -> Tuple[str, ...]:
     return batch_axes(mesh)
 
 
-def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh,
+def opt_state_sharding(params, opt_state, cfg, mesh: Mesh,
                        zero_axes: Tuple[str, ...] = ()):
     """Sharding pytree for a QGaLoreState aligned with ``params``.
+
+    ``cfg``: QGaLoreConfig or ParamRules — per-leaf galore/rank decisions
+    (and therefore moment/projection layouts) resolve through the param
+    groups; frozen-group leaves hold no state (None stays None).
 
     ``zero_axes``: DP mesh axes to additionally partition the Adam moments
     and projection matrices over (ZeRO-style optimizer-state sharding).
@@ -245,7 +249,7 @@ def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh,
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=quant.is_qtensor)
     inner_flat = jax.tree_util.tree_flatten(
-        opt_state.inner, is_leaf=lambda x: isinstance(x, Adam8bitState))[0]
+        opt_state.inner, is_leaf=qgalore._is_inner_leaf)[0]
     proj_flat = jax.tree_util.tree_flatten(
         opt_state.proj,
         is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
@@ -259,7 +263,7 @@ def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh,
             mom_log, proj_log = _galore_state_logicals(spec, logical)
         else:
             mom_log, proj_log = logical, None
-        inner_out.append(Adam8bitState(
+        inner_out.append(None if inner is None else Adam8bitState(
             _shard_like(inner.m, mom_log, mesh, zero_axes),
             _shard_like(inner.v, mom_log, mesh, zero_axes)))
         proj_out.append(None if proj is None
@@ -271,6 +275,38 @@ def opt_state_sharding(params, opt_state, cfg: QGaLoreConfig, mesh: Mesh,
         proj=jax.tree_util.tree_unflatten(treedef, proj_out),
         count=NamedSharding(mesh, P()),
     )
+
+
+def zero2_scatter_dims(opt_sharding, specs: List[LeafSpec],
+                       zero_axes: Tuple[str, ...]):
+    """{leaf index: low-rank-gradient dim} for the ZeRO-2 gradient
+    reduce-scatter (ROADMAP item): for each galore leaf whose ZeRO moment
+    shard partitions some dim over EXACTLY the zero (DP) axes, return that
+    dim — the steady-state low-rank gradient is then ``psum_scatter``ed
+    along it (train/step.py), so each DP rank receives only the reduced
+    slice that feeds the moment shard it owns, instead of a replicated
+    ``pmean``. Leaves whose moments the ZeRO pass left unsharded (nothing
+    divides) are omitted and keep the pmean."""
+    if not zero_axes:
+        return {}
+    inner_flat = jax.tree_util.tree_flatten(
+        opt_sharding.inner, is_leaf=qgalore._is_inner_leaf)[0]
+    out = {}
+    for i, (spec, ish) in enumerate(zip(specs, inner_flat)):
+        if not spec.galore or ish is None:
+            continue
+        m_sh = ish.m.q if quant.is_qtensor(ish.m) else ish.m
+        if not isinstance(m_sh, NamedSharding):
+            continue
+        for d, part in enumerate(m_sh.spec):
+            parts = (part,) if isinstance(part, str) else tuple(part or ())
+            # the dim carrying the zero axes (it may additionally be
+            # model-sharded: the scatter is manual over the DP axes only,
+            # GSPMD keeps handling the model factor outside the region)
+            if set(zero_axes) <= set(parts) and d < len(spec.low_shape):
+                out[i] = d
+                break
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -31,7 +31,13 @@ def main():
                          "subspace refresh (shard_map)")
     ap.add_argument("--zero", action="store_true",
                     help="ZeRO-shard the quantized optimizer state over "
-                         "the DP axes")
+                         "the DP axes (combined with --compress this also "
+                         "turns on the ZeRO-2 gradient reduce-scatter; "
+                         "see --zero2)")
+    ap.add_argument("--zero2", type=int, default=-1, choices=(-1, 0, 1),
+                    help="force the ZeRO-2 low-rank-gradient "
+                         "reduce-scatter on (1) or off (0); default -1 "
+                         "follows --zero")
     ap.add_argument("--mesh", default="",
                     help="dxm, e.g. 4x2 (data x model); empty = single dev")
     ap.add_argument("--devices", type=int, default=0,
@@ -75,6 +81,7 @@ def main():
     cell = ShapeCell("train", args.seq, args.batch, "train")
     trainer = Trainer(bundle, tcfg, qcfg, cell=cell, accum=args.accum,
                       mesh=mesh, zero_shard=args.zero and mesh is not None,
+                      zero2=None if args.zero2 < 0 else bool(args.zero2),
                       param_dtype=jnp.float32 if args.smoke
                       else jnp.bfloat16)
     if mesh is not None:

@@ -24,15 +24,20 @@ from repro.models.base import ModelBundle
 
 
 def _eligible(path: str, leaf) -> bool:
-    if getattr(leaf, "ndim", 0) != 2 and not (
-            quant.is_qtensor(leaf) and len(leaf.shape) == 2):
+    # 2-D mats and layer-stacked (L, m, n) mats both take adapters (the
+    # stacked case is the scanned-segment layout every bundle uses — one
+    # (L, m, r)/(L, r, n) adapter pair per stacked leaf).
+    nd = len(leaf.shape) if quant.is_qtensor(leaf) \
+        else getattr(leaf, "ndim", 0)
+    if nd not in (2, 3):
         return False
     p = path.lower()
     return not any(k in p for k in ("embed", "head", "norm"))
 
 
 def init_adapters(params, rank: int, key, mode: str = "lora"):
-    """{path: {"A","B"} or {"U","V"}} for every eligible 2-D leaf."""
+    """{path: {"A","B"} or {"U","V"}} for every eligible 2-D or layer-
+    stacked 3-D leaf (adapters carry the leading stack dim)."""
     flat = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=quant.is_qtensor)[0]
     out = {}
@@ -40,19 +45,20 @@ def init_adapters(params, rank: int, key, mode: str = "lora"):
         pstr = jax.tree_util.keystr(path)
         if not _eligible(pstr, leaf):
             continue
-        m, n = leaf.shape
+        lead = tuple(leaf.shape[:-2])
+        m, n = leaf.shape[-2], leaf.shape[-1]
         k = jax.random.fold_in(key, i)
         r = min(rank, m, n)
         if mode == "factorized":
             out[pstr] = {
-                "U": jax.random.normal(k, (m, r)) / math.sqrt(m),
-                "V": jax.random.normal(jax.random.fold_in(k, 1), (r, n))
-                / math.sqrt(r),
+                "U": jax.random.normal(k, lead + (m, r)) / math.sqrt(m),
+                "V": jax.random.normal(jax.random.fold_in(k, 1),
+                                       lead + (r, n)) / math.sqrt(r),
             }
         else:
             out[pstr] = {
-                "A": jax.random.normal(k, (m, r)) / math.sqrt(m),
-                "B": jnp.zeros((r, n)),
+                "A": jax.random.normal(k, lead + (m, r)) / math.sqrt(m),
+                "B": jnp.zeros(lead + (r, n)),
             }
     return out
 
@@ -75,7 +81,8 @@ def merge(params, adapters: Dict, alpha: float = 32.0, rank: int = 16,
         else:
             base = quant.dequantize(leaf, jnp.float32) \
                 if quant.is_qtensor(leaf) else leaf.astype(jnp.float32)
-            r = ad["A"].shape[1]
+            r = ad["A"].shape[-1]
+            # @ broadcasts over the leading stack dim for 3-D adapters
             leaves.append(base + (alpha / r) * (ad["A"] @ ad["B"]))
     return jax.tree_util.tree_unflatten(treedef, leaves)
 

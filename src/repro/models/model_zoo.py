@@ -30,12 +30,16 @@ def get_config(arch_id: str, smoke: bool = False) -> ModelConfig:
 
 
 def build(cfg: ModelConfig, *, q_chunk: int = 1024,
-          dtype=jnp.bfloat16, ep_axis=None) -> ModelBundle:
+          dtype=jnp.bfloat16, ep_axis=None,
+          split_layers: int = 0) -> ModelBundle:
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):
         from repro.models import transformer
         return transformer.build(cfg, q_chunk=q_chunk, dtype=dtype,
-                                 ep_axis=ep_axis)
+                                 ep_axis=ep_axis,
+                                 split_layers=split_layers)
+    if split_layers:
+        raise ValueError(f"split_layers unsupported for family {fam}")
     if fam == "xlstm":
         from repro.models import xlstm_model
         return xlstm_model.build(cfg, q_chunk=q_chunk, dtype=dtype)

@@ -148,21 +148,46 @@ def _head_logits(params, h, cfg: ModelConfig, dtype):
 
 
 def build(cfg: ModelConfig, *, q_chunk: int = 1024,
-          dtype=jnp.bfloat16, ep_axis=None) -> ModelBundle:
+          dtype=jnp.bfloat16, ep_axis=None,
+          split_layers: int = 0) -> ModelBundle:
     """Decoder-only LM bundle (dense / moe / vlm families).
 
     ``ep_axis``: manual mesh axis name for expert-parallel MoE — only valid
     when the TRAIN step runs inside a shard_map over that axis (serving
-    paths stay GSPMD-auto)."""
+    paths stay GSPMD-auto).
+
+    ``split_layers``: split the (dense) block stack into two segments after
+    the first N layers — ``seg0_dense`` (layers 0..N-1) and ``seg1_dense``
+    (the rest). Numerically identical to the single-segment model; it
+    exists so param-group rules (``repro.core.rules``) can address layer
+    RANGES at leaf granularity — e.g. the fine-tune entrypoint freezes
+    ``seg0_`` (early layers) while Q-GaLore trains ``seg1_``. MoE models
+    already split at ``first_dense_layers``; combining both is unsupported.
+    """
     mc = cfg.moe
     is_vlm = cfg.family == "vlm"
+    if split_layers and not (0 < split_layers < cfg.num_layers):
+        # a silently-ignored split would leave ONE segment named
+        # seg0_dense — and freeze-by-"seg0_" patterns would then freeze
+        # every block
+        raise ValueError(
+            f"split_layers={split_layers} out of range for "
+            f"num_layers={cfg.num_layers} (need 0 < split < num_layers)")
 
     # ---- segment layout ----
     if mc is not None and mc.first_dense_layers:
+        if split_layers:
+            raise ValueError("split_layers unsupported for MoE models with "
+                             "first_dense_layers (already two segments)")
         segs = [("dense", mc.first_dense_layers, False),
                 ("moe", cfg.num_layers - mc.first_dense_layers, True)]
     elif mc is not None:
+        if split_layers:
+            raise ValueError("split_layers unsupported for MoE models")
         segs = [("moe", cfg.num_layers, True)]
+    elif split_layers:
+        segs = [("dense", split_layers, False),
+                ("dense", cfg.num_layers - split_layers, False)]
     else:
         segs = [("dense", cfg.num_layers, False)]
 

@@ -2,9 +2,14 @@
 
 Format: one directory per step (``step_00001234/``) containing
 ``arrays.npz`` (flat path→ndarray map covering params + optimizer state),
-``meta.json`` (step, controller state, rng, config fingerprint). Writes go
-to ``<dir>.tmp`` and are published with an atomic ``os.rename`` — a crash
-mid-write never corrupts the latest checkpoint.
+``meta.json`` (step, controller state, rng, config fingerprint, and —
+since the param-group redesign — the optimizer group metadata:
+``rules_fingerprint`` plus the per-leaf ``groups`` map written by
+``Trainer.save``; :func:`check_rules_compat` refuses a restore under a
+different rule-set, since frozen/regrouped leaves change which state
+arrays even exist). Writes go to ``<dir>.tmp`` and are published with an
+atomic ``os.rename`` — a crash mid-write never corrupts the latest
+checkpoint.
 
 Mesh independence: arrays are gathered to host before writing, so a
 checkpoint saved on one mesh restores onto any other (elastic scaling) —
@@ -36,6 +41,26 @@ import numpy as np
 from repro.core import quant
 
 _STEP_RE = re.compile(r"^step_(\d{8})$")
+
+
+def check_rules_compat(meta: Dict, fingerprint: str,
+                       groups: Optional[Dict[str, str]] = None) -> None:
+    """Refuse to adopt a checkpoint written under different param-group
+    rules. Old checkpoints (no ``rules_fingerprint`` in meta) pass — they
+    predate the group system and carry full per-leaf state."""
+    saved = meta.get("rules_fingerprint")
+    if saved is None:
+        return
+    if saved != fingerprint:
+        saved_groups = meta.get("groups") or {}
+        changed = sorted(
+            p for p in set(saved_groups) | set(groups or {})
+            if saved_groups.get(p) != (groups or {}).get(p))[:8]
+        raise ValueError(
+            "checkpoint was written under different param-group rules "
+            f"(saved fingerprint {saved}, current {fingerprint}; "
+            f"first differing leaves: {changed}). Restore with the "
+            "original rules or start fresh state.")
 
 
 def _flatten_arrays(tree) -> Dict[str, np.ndarray]:
@@ -135,6 +160,18 @@ class CheckpointManager:
             shutil.rmtree(self._path(s), ignore_errors=True)
 
     # -- restore ---------------------------------------------------------------
+    def read_meta(self, step: Optional[int] = None) -> Dict:
+        """Load just ``meta.json`` for a step (latest by default) — lets
+        callers validate compatibility (``check_rules_compat``) BEFORE the
+        arrays are materialized, so a rules mismatch surfaces as the
+        intended loud error rather than a missing-leaf KeyError."""
+        self.wait()
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(os.path.join(self._path(step), "meta.json")) as f:
+            return json.load(f)
+
     def restore(self, step: Optional[int], abstract_state,
                 shardings=None):
         """Restore into the structure of ``abstract_state`` (eval_shape'd),

@@ -38,8 +38,9 @@ import numpy as np
 
 from repro import compat
 from repro.config import QGaLoreConfig, TrainConfig
-from repro.core import qgalore, quant
+from repro.core import qgalore, quant, transform
 from repro.core.qgalore import QGaLoreState
+from repro.core.rules import as_rules
 from repro.models.base import ModelBundle
 from repro.train import stack
 
@@ -49,28 +50,39 @@ class TrainState(NamedTuple):
     opt: QGaLoreState
 
 
-def prepare_params(params, qcfg: QGaLoreConfig, param_dtype=jnp.bfloat16):
+def prepare_params(params, qcfg, param_dtype=jnp.bfloat16):
     """Quantize eligible weights to INT8 (Q-GaLore) or cast to the param
-    dtype (baselines). Norm scales / small vectors stay float32."""
-    if qcfg.weight_bits == 8:
-        return quant.tree_quantize(
-            params, bits=8, block=qcfg.quant_block, symmetric=True,
-            predicate=lambda p, l: l.ndim >= 2 and l.shape[-1] >= 32)
-    def cast(l):
-        if l.ndim >= 2 and jnp.issubdtype(l.dtype, jnp.floating):
-            return l.astype(param_dtype)
-        return l
-    return jax.tree_util.tree_map(cast, params)
+    dtype (baselines). Norm scales / small vectors stay float32.
+
+    ``qcfg`` may be a ``QGaLoreConfig`` or a ``ParamRules``: each leaf's
+    ``weight_bits`` comes from its resolved param group, so a rule-set can
+    keep an INT8 frozen base under fp trainable groups (or vice versa)."""
+    rules = as_rules(qcfg)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        eff = rules.config_for(jax.tree_util.keystr(path))
+        if eff.weight_bits == 8:
+            if leaf.ndim >= 2 and leaf.shape[-1] >= 32:
+                out.append(quant.quantize_blockwise(
+                    leaf, bits=8, block=eff.quant_block, symmetric=True))
+            else:
+                out.append(leaf)
+        elif leaf.ndim >= 2 and jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(leaf.astype(param_dtype))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def init_state(bundle: ModelBundle, qcfg: QGaLoreConfig, key,
+def init_state(bundle: ModelBundle, qcfg, key,
                param_dtype=jnp.bfloat16) -> TrainState:
     params = prepare_params(bundle.init_params(key), qcfg, param_dtype)
     opt = qgalore.init(params, qcfg, jax.random.fold_in(key, 1))
     return TrainState(params, opt)
 
 
-def abstract_state(bundle: ModelBundle, qcfg: QGaLoreConfig,
+def abstract_state(bundle: ModelBundle, qcfg,
                    param_dtype=jnp.bfloat16) -> TrainState:
     """eval_shape'd TrainState (no allocation) — for sharding and dry-run."""
     return jax.eval_shape(
@@ -83,24 +95,6 @@ def _specs_for(bundle, qcfg, param_dtype):
     return qgalore.leaf_specs(params_abs, qcfg)
 
 
-def _global_norm(grads):
-    leaves = [g for g in jax.tree_util.tree_leaves(grads)
-              if hasattr(g, "dtype") and jnp.issubdtype(g.dtype,
-                                                        jnp.floating)]
-    return jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
-                        for g in leaves))
-
-
-def _clip(grads, max_norm):
-    if not max_norm:
-        return grads, _global_norm(grads)
-    norm = _global_norm(grads)
-    scale = jnp.minimum(1.0, max_norm / (norm + 1e-6))
-    return jax.tree_util.tree_map(
-        lambda g: (g * scale).astype(g.dtype)
-        if jnp.issubdtype(g.dtype, jnp.floating) else g, grads), norm
-
-
 def _microbatches(batch, accum: int):
     def split(x):
         b = x.shape[0]
@@ -108,14 +102,36 @@ def _microbatches(batch, accum: int):
     return jax.tree_util.tree_map(split, batch)
 
 
-def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
+def build_train_step(bundle: ModelBundle, qcfg,
                      tcfg: TrainConfig, *, impl: str = "fused",
                      accum: int = 1, param_dtype=jnp.bfloat16,
                      mesh=None, dp_compress: bool = False,
-                     moe_ep_axis=None):
+                     moe_ep_axis=None, state_shardings=None,
+                     zero2_dims=None):
     """Returns ``step(state, batch, lr, rng, refresh_masks) -> (state,
     metrics)`` with ``refresh`` a static flag baked per variant via
     functools.partial before jit.
+
+    ``qcfg`` may be a plain ``QGaLoreConfig`` or a ``ParamRules`` rule-set
+    (``repro.core.rules``): per-leaf recipes resolve through the param
+    groups, frozen-group leaves are excluded from the grad-norm clip and
+    pass through the optimizer untouched. The optimizer half of the step
+    is the canonical transform chain
+    (``repro.core.transform.qgalore_transform`` — project → quantized_adam
+    → backproject → sr_requant), whose fused/batched executor is
+    ``qgalore.apply_updates``.
+
+    ``state_shardings``: the TrainState sharding pytree (mesh runs) —
+    forwarded to the optimizer so the batched-leaf scan operands carry
+    explicit layouts (quiets GSPMD's involuntary-rematerialization
+    warnings under ZeRO sharding).
+
+    ``zero2_dims``: {leaf index: scatter dim} from
+    ``sharding.zero2_scatter_dims`` — steady-state low-rank gradients for
+    these leaves are reduce-scattered over the DP axes along the SAME dim
+    their ZeRO moment shard uses (each rank receives only its owned slice
+    of the reduced gradient: (D-1)/D of the pmean's bytes and no
+    replicated low-rank grads), instead of the replicated ``pmean``.
 
     ``dp_compress`` (beyond-paper): run the gradient phase under a
     partial-manual ``shard_map`` over the data(+pod) axes — the backward scan
@@ -142,18 +158,24 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
     steady-state compressed step already does), so plain-mode and
     dist-refresh trajectories agree only to clip-scale tolerance.
     """
-    specs = _specs_for(bundle, qcfg, param_dtype)
+    rules = as_rules(qcfg)
+    base = rules.base
+    specs = _specs_for(bundle, rules, param_dtype)
+    tx = transform.qgalore_transform(rules, specs=specs)
+    any_galore = any(s.galore for s in specs)
     seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
+    zero2_dims = dict(zero2_dims or {})
 
     from repro.kernels import dispatch as kdispatch
     from repro.models import layers as _layers
     logging.getLogger(__name__).info(
         "train step: kernel backend=%s quantized_dense=%s (backend=%s) "
-        "fused_update=%s batch_leaves=%s",
+        "fused_update=%s batch_leaves=%s groups=%s",
         kdispatch.default_backend("fused_qgalore_update"),
         _layers.QUANTIZED_DENSE,
         kdispatch.default_backend("quantized_dense"),
-        qcfg.fused_update, qcfg.batch_leaves)
+        base.fused_update, base.batch_leaves,
+        sorted({s.group for s in specs}))
 
     def grad_phase(params, proj_trees, batch):
         """(loss, metrics, grads) on the (possibly shard-local) batch."""
@@ -236,11 +258,20 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
     # tile it), excluding expert-parallel leaves (their gradients are owned
     # per EP shard and never cross the DP front whole).
     dist_refresh_ok = set()
-    if dp_axes and qcfg.enabled and qcfg.dist_refresh:
+    if dp_axes and any_galore and base.dist_refresh:
         for i, sp in enumerate(specs):
             if (sp.galore and sp.batch and sp.batch[0] % dp_size == 0
                     and not _is_expert(sp.path)):
                 dist_refresh_ok.add(i)
+
+    # ZeRO-2 gradient reduce-scatter only applies where the steady-state
+    # gradient is LOW-RANK (fused backward) and the leaf's moments are
+    # actually DP-sharded; drop anything else defensively.
+    if impl != "fused" or not dp_axes:
+        zero2_dims = {}
+    zero2_dims = {i: d for i, d in zero2_dims.items()
+                  if specs[i].galore and not _is_expert(specs[i].path)
+                  and specs[i].low_shape[d] % dp_size == 0}
 
     def grad_phase_dp(params, proj_trees, batch, refresh_proj=None,
                       refresh_masks=None, rng=None):
@@ -256,6 +287,10 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         other_axes = tuple(a for a in dp_axes if a != moe_ep_axis)
         dist_now = sorted(int(k) for k in refresh_proj) \
             if refresh_proj is not None else []
+        # steady state with low-rank emission only: at refresh steps (or
+        # with the fused backward off) galore grads are full-rank
+        zero2_now = dict(zero2_dims) \
+            if refresh_proj is None and proj_trees else {}
 
         def inner(p, pt, b):
             loss, metrics, grads = grad_phase(p, pt, b)
@@ -269,6 +304,14 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
             out = []
             for i, (path, g) in enumerate(flat):
                 pstr = jax.tree_util.keystr(path)
+                if specs[i].frozen:
+                    # frozen-group leaves never reach the optimizer —
+                    # don't pay the cross-replica reduce for a gradient
+                    # that is discarded (the frozen embedding is the
+                    # dominant wire payload in the fine-tune workload);
+                    # zeros keep the replicated out-spec truthful.
+                    out.append(jnp.zeros_like(g))
+                    continue
                 if i in dist_now:
                     # distributed refresh, phase 1: reduce-scatter the
                     # full-rank gradient over the layer stack — each shard
@@ -278,6 +321,17 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
                     out.append(jax.lax.psum_scatter(
                         g.astype(jnp.float32), dp_axes,
                         scatter_dimension=0, tiled=True) / dp_size)
+                    continue
+                if i in zero2_now and tuple(g.shape) == specs[i].low_shape:
+                    # ZeRO-2: the low-rank gradient is reduce-scattered
+                    # along the SAME dim the leaf's ZeRO moment shard uses
+                    # — each DP rank leaves with only its owned slice of
+                    # the reduced gradient, aligned with the state it
+                    # updates (no replicated low-rank grads on the wire).
+                    out.append(jax.lax.psum_scatter(
+                        g.astype(jnp.float32), dp_axes,
+                        scatter_dimension=zero2_now[i], tiled=True)
+                        / dp_size)
                     continue
                 if _BF16_REDUCE and g.dtype == jnp.float32:
                     g = g.astype(jnp.bfloat16)
@@ -310,6 +364,12 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
                 # reduced full-rank gradient leaves the region layer-
                 # sharded over the DP front (psum_scatter tiling)
                 gspecs.append(P(dp_axes, *([None] * (nd - 1))))
+            elif i in zero2_now:
+                # ZeRO-2: low-rank gradient leaves sharded on its moment
+                # dim (same rank count as the virtual shape)
+                parts = [None] * len(specs[i].low_shape)
+                parts[zero2_now[i]] = dp_axes
+                gspecs.append(P(*parts))
             elif _is_expert(pstr) and nd >= 3:
                 parts = [None] * nd
                 parts[1] = moe_ep_axis
@@ -356,7 +416,8 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
                 # PartitionId, which XLA:CPU rejects — see repro.compat).
                 idx = jnp.arange(b_loc, dtype=jnp.int32) + sid[0] * b_loc
                 P_new_flat, sim_loc = qgalore.refresh_slice(
-                    g_loc, P_flat, mask_flat, idx, qcfg, sp.rank,
+                    g_loc, P_flat, mask_flat, idx,
+                    qgalore._eff_cfg(sp, rules), sp.rank,
                     sp.side, jax.random.fold_in(key, i))
                 low_loc = stack.project_leaf(g_loc, P_new_flat, sp.side)
                 gather = functools.partial(
@@ -396,7 +457,7 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         # Non-segment galore leaves (head, embedding) ride along so their
         # cotangents also go low-rank before clip / DP reduction.
         proj_trees: Dict[str, Any] = {}
-        if impl == "fused" and qcfg.enabled and not refresh:
+        if impl == "fused" and any_galore and not refresh:
             for k, sub in opt.proj.items():
                 leaves = jax.tree_util.tree_leaves(
                     sub, is_leaf=lambda x: x is None or quant.is_qtensor(x))
@@ -432,10 +493,12 @@ def build_train_step(bundle: ModelBundle, qcfg: QGaLoreConfig,
         else:
             loss, metrics, grads = grad_phase(params, proj_trees, batch)
 
-        grads, gnorm = _clip(grads, tcfg.grad_clip)
-        new_params, new_opt, opt_metrics = qgalore.apply_updates(
-            params, grads, opt, qcfg, lr=lr, rng=rng,
-            refresh_masks=refresh_masks, refresh=refresh, specs=specs)
+        grads, gnorm = transform.clip_by_global_norm(grads, tcfg.grad_clip,
+                                                     specs=specs)
+        new_params, new_opt, opt_metrics = tx.update(
+            grads, opt, params, lr=lr, rng=rng,
+            refresh_masks=refresh_masks, refresh=refresh, specs=specs,
+            shardings=state_shardings)
         if dist_sims:
             opt_metrics = {**opt_metrics,
                            "sims": {**dist_sims,

@@ -29,6 +29,7 @@ import numpy as np
 
 from repro.config import QGaLoreConfig, TrainConfig
 from repro.core import adaptive, optimizers, qgalore
+from repro.core.rules import as_rules, group_assignment
 from repro.data.synthetic import batch_for_bundle
 from repro.models.base import ModelBundle
 from repro.train import checkpoint as ckpt_lib
@@ -59,20 +60,32 @@ class StragglerMonitor:
 
 class Trainer:
     def __init__(self, bundle: ModelBundle, tcfg: TrainConfig,
-                 qcfg: QGaLoreConfig, *, cell=None, impl: str = "fused",
+                 qcfg, *, cell=None, impl: str = "fused",
                  param_dtype=jnp.float32, accum: int = 1,
                  mesh=None, zero_shard: bool = False,
+                 zero2: Optional[bool] = None,
                  fault_hook: Optional[Callable[[int], None]] = None):
-        """``mesh``: run the step distributed — params/optimizer state are
+        """``qcfg``: a plain ``QGaLoreConfig`` or a ``ParamRules`` rule-set
+        (``repro.core.rules``) — per-group ranks / intervals / bits /
+        frozen groups resolve through the param-group rules; a plain
+        config is the single-default-group case (bit-identical to the
+        pre-rules trainer).
+
+        ``mesh``: run the step distributed — params/optimizer state are
         placed with the ``distributed.sharding`` rules, batches are sharded
         over the DP axes, and the jitted steps pin state in/out shardings
         so the layout survives every step. ``zero_shard`` additionally
         partitions the quantized optimizer state (low-rank Adam moments +
         INT4 projections) over the DP axes — ZeRO-style, each DP rank owns
-        a 1/D slice, gathered only where the fused update consumes it."""
+        a 1/D slice, gathered only where the fused update consumes it.
+        ``zero2`` (default: follows ``zero_shard``) reduce-scatters the
+        steady-state low-rank gradients along each leaf's moment-shard dim
+        instead of ``pmean``-replicating them (requires
+        ``compress_dp_grads``)."""
+        self.rules = as_rules(qcfg)
+        self.qcfg = self.rules.base
         self.bundle = bundle
         self.tcfg = tcfg
-        self.qcfg = qcfg
         self.impl = impl
         self.param_dtype = param_dtype
         from repro.config import ShapeCell
@@ -82,24 +95,53 @@ class Trainer:
         self.stragglers = StragglerMonitor()
         self.mesh = mesh
         self.zero_shard = zero_shard
+        self.zero2 = zero_shard if zero2 is None else zero2
+        dp_compress = self.qcfg.compress_dp_grads and mesh is not None
+        if zero2 and not (mesh is not None and zero_shard and dp_compress):
+            # an explicit force-on that cannot take effect must not
+            # silently fall back to the replicated pmean
+            raise ValueError(
+                "zero2=True requires a mesh, zero_shard=True, and "
+                "compress_dp_grads=True (the reduce-scatter dims come "
+                "from the ZeRO moment sharding inside the compressed-DP "
+                f"shard_map); got mesh={mesh is not None}, "
+                f"zero_shard={zero_shard}, "
+                f"compress_dp_grads={self.qcfg.compress_dp_grads}")
 
-        raw_step, self.specs = step_lib.build_train_step(
-            bundle, qcfg, tcfg, impl=impl, accum=accum,
-            param_dtype=param_dtype, mesh=mesh,
-            dp_compress=qcfg.compress_dp_grads and mesh is not None)
-        self._raw_step = raw_step
-
+        # sharding first: the step consumes the layouts (scan-carry
+        # annotations) and the ZeRO-2 scatter dims derived from them
         self.state_sharding = None
         self._batch_sharding = None
+        zero2_dims = None
         if mesh is not None:
             from repro.distributed import sharding as sh
-            abs_state = step_lib.abstract_state(bundle, qcfg, param_dtype)
+            abs_state = step_lib.abstract_state(bundle, self.rules,
+                                                param_dtype)
             zaxes = sh.zero_axes_for(mesh) if zero_shard else ()
             self.state_sharding = step_lib.TrainState(
                 sh.param_sharding(abs_state.params, mesh),
                 sh.opt_state_sharding(abs_state.params, abs_state.opt,
-                                      qcfg, mesh, zero_axes=zaxes))
-            from repro.data.synthetic import batch_for_bundle
+                                      self.rules, mesh, zero_axes=zaxes))
+            if self.zero2 and zaxes and dp_compress:
+                abs_specs = qgalore.leaf_specs(abs_state.params, self.rules)
+                zero2_dims = sh.zero2_scatter_dims(
+                    self.state_sharding.opt, abs_specs, zaxes)
+            elif self.zero2 and zaxes and not dp_compress:
+                # zero_shard-implied default that can't take effect —
+                # say so rather than silently keeping the pmean path
+                log.info("zero2 inactive: compress_dp_grads is off (the "
+                         "reduce-scatter lives in the compressed-DP "
+                         "shard_map); pass --compress / "
+                         "compress_dp_grads=True to enable it")
+
+        raw_step, self.specs = step_lib.build_train_step(
+            bundle, self.rules, tcfg, impl=impl, accum=accum,
+            param_dtype=param_dtype, mesh=mesh, dp_compress=dp_compress,
+            state_shardings=self.state_sharding, zero2_dims=zero2_dims)
+        self._raw_step = raw_step
+
+        if mesh is not None:
+            # `sh` / batch_for_bundle already bound above (same condition)
             batch_abs = jax.eval_shape(
                 lambda: batch_for_bundle(bundle, self.cell, 0, tcfg.seed))
             self._batch_sharding = sh.data_sharding(batch_abs, mesh)
@@ -126,7 +168,8 @@ class Trainer:
                 functools.partial(raw_step, refresh=True),
                 static_argnames=())
 
-        self.controller = adaptive.SubspaceController(self.specs, qcfg)
+        self.controller = adaptive.SubspaceController(self.specs,
+                                                      self.rules)
         self.mgr = None
         if tcfg.checkpoint_dir:
             self.mgr = ckpt_lib.CheckpointManager(
@@ -134,7 +177,7 @@ class Trainer:
                 async_save=tcfg.async_checkpoint)
 
         self.state = step_lib.init_state(
-            bundle, qcfg, jax.random.PRNGKey(tcfg.seed), param_dtype)
+            bundle, self.rules, jax.random.PRNGKey(tcfg.seed), param_dtype)
         if self.state_sharding is not None:
             self.state = jax.device_put(self.state, self.state_sharding)
         self.start_step = 0
@@ -142,12 +185,20 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def _abstract_state(self):
-        return step_lib.abstract_state(self.bundle, self.qcfg,
+        return step_lib.abstract_state(self.bundle, self.rules,
                                        self.param_dtype)
 
     def maybe_restore(self) -> int:
         if self.mgr is None or self.mgr.latest_step() is None:
             return 0
+        # group-metadata compatibility FIRST (meta only, no arrays): a
+        # checkpoint written under different param-group rules has
+        # differently-shaped (or missing) optimizer state per leaf — fail
+        # with the loud rules-mismatch error, not a missing-leaf KeyError
+        # from the array restore.
+        ckpt_lib.check_rules_compat(self.mgr.read_meta(),
+                                    self.rules.fingerprint(),
+                                    group_assignment(self.specs))
         # state_sharding may describe a different mesh than the checkpoint
         # was saved on — restore is elastic (arrays are host-gathered at
         # save; device_put here re-places them under the current rules)
@@ -164,7 +215,9 @@ class Trainer:
         if self.mgr is None:
             return
         self.mgr.save(step, self.state,
-                      {"controller": self.controller.to_json()})
+                      {"controller": self.controller.to_json(),
+                       "rules_fingerprint": self.rules.fingerprint(),
+                       "groups": group_assignment(self.specs)})
 
     # ------------------------------------------------------------------
     def _run_one(self, step: int):
@@ -177,8 +230,8 @@ class Trainer:
         lr = optimizers.lr_at(step, self.tcfg)
         rng = jax.random.fold_in(jax.random.PRNGKey(self.tcfg.seed + 17),
                                  step)
-        masks = self.controller.masks_for_step(step) if self.qcfg.enabled \
-            else {}
+        masks = self.controller.masks_for_step(step) \
+            if self.controller.units else {}
         if masks:
             # pass masks for EVERY galore leaf (False where not due) so the
             # refresh variant compiles exactly once

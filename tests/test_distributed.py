@@ -438,6 +438,84 @@ def test_zero_sharded_state_matches_and_reshards():
     assert "OK zero shard" in out
 
 
+def test_zero2_reduce_scatter_matches_pmean():
+    """ZeRO-2 gradient reduce-scatter (ROADMAP item): the steady-state
+    low-rank gradients are psum_scattered along each leaf's moment-shard
+    dim instead of pmean-replicated. Trajectory must match the pmean path
+    (identical psum values, only the layout of the result differs), and
+    the scatter dims must align with the ZeRO moment sharding."""
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.config import QGaLoreConfig, ShapeCell, TrainConfig
+        from repro.core.optimizers import preset
+        from repro.core import qgalore
+        from repro.distributed import sharding as sh
+        from repro.models import model_zoo
+        from repro.train import step as step_lib
+        from repro.data.synthetic import batch_for_bundle
+
+        mesh = jax.make_mesh((8, 1), ("data", "model"))
+        bundle = model_zoo.build_arch("llama-60m", smoke=True,
+                                      dtype=jnp.float32)
+        qcfg = preset("qgalore", QGaLoreConfig(rank=8, min_dim=32,
+                                               compress_dp_grads=True))
+        tcfg = TrainConfig(global_batch=8, seq_len=32, grad_clip=1.0)
+        cell = ShapeCell("t", 32, 8, "train")
+
+        abs_state = step_lib.abstract_state(bundle, qcfg, jnp.float32)
+        specs = qgalore.leaf_specs(abs_state.params, qcfg)
+        o_zero = sh.opt_state_sharding(abs_state.params, abs_state.opt,
+                                       qcfg, mesh, zero_axes=("data",))
+        dims = sh.zero2_scatter_dims(o_zero, specs, ("data",))
+        assert dims, "no ZeRO-2 scatterable leaves found"
+        # alignment: the scatter dim carries the data axis in the moment
+        # sharding and divides the low-rank shape by the DP world size
+        inner_flat = jax.tree_util.tree_flatten(
+            o_zero.inner, is_leaf=qgalore._is_inner_leaf)[0]
+        for i, d in dims.items():
+            m_sh = inner_flat[i].m
+            spec_p = (m_sh.q if hasattr(m_sh, 'q') else m_sh).spec
+            part = spec_p[d]
+            parts = (part,) if isinstance(part, str) else tuple(part)
+            assert "data" in parts, (specs[i].path, d, spec_p)
+            assert specs[i].low_shape[d] % 8 == 0
+
+        p_sh = sh.param_sharding(abs_state.params, mesh)
+        b_abs = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+            batch_for_bundle(bundle, cell, 0))
+        b_sh = sh.data_sharding(b_abs, mesh)
+        rep = sh.replicated(mesh)
+        ss = step_lib.TrainState(p_sh, o_zero)
+
+        losses = {}
+        for name, z2 in (("pmean", None), ("zero2", dims)):
+            raw, _ = step_lib.build_train_step(
+                bundle, qcfg, tcfg, impl="fused", param_dtype=jnp.float32,
+                mesh=mesh, dp_compress=True,
+                state_shardings=step_lib.TrainState(p_sh, o_zero),
+                zero2_dims=z2)
+            state = step_lib.init_state(bundle, qcfg,
+                                        jax.random.PRNGKey(0), jnp.float32)
+            fn = jax.jit(lambda st, b, lr, rng: raw(
+                st, b, lr, rng, refresh_masks=None, refresh=False),
+                in_shardings=(ss, b_sh, rep, rep),
+                out_shardings=(ss, None, None))
+            ls = []
+            with mesh:
+                st = jax.device_put(state, ss)
+                for s in range(3):
+                    st, met, _ = fn(st, batch_for_bundle(bundle, cell, s),
+                                    1e-2, jax.random.PRNGKey(s))
+                    ls.append(float(met["loss"]))
+            losses[name] = ls
+        np.testing.assert_allclose(losses["pmean"], losses["zero2"],
+                                   rtol=1e-4, atol=1e-4)
+        print("OK zero2 parity", losses)
+    """, timeout=900)
+    assert "OK zero2 parity" in out
+
+
 def test_dp_compress_matches_plain():
     """The shard_map-compressed gradient path must produce the same update
     as the plain GSPMD path (same loss trajectory over steps)."""

@@ -1,0 +1,398 @@
+"""Param-group rules + transform-chain tests: resolution ordering, frozen
+groups, per-group recipes, bit-parity of the chain vs the fused monolith,
+and the group-aware adaptive controller."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QGaLoreConfig, replace
+from repro.core import adaptive, qgalore, quant, transform
+from repro.core.optimizers import preset, preset_rules
+from repro.core.rules import (DEFAULT_GROUP, ParamGroup, ParamRules,
+                              as_rules, normalize_path)
+
+
+def _toy_params(quantized=True):
+    key = jax.random.PRNGKey(0)
+    params = {
+        "blocks": {
+            "w1": jax.random.normal(key, (3, 256, 128)) * 0.02,
+            "w2": jax.random.normal(jax.random.fold_in(key, 1),
+                                    (128, 256)) * 0.02,
+            "norm": jnp.ones((128,)),
+        },
+        "embed": jax.random.normal(jax.random.fold_in(key, 2),
+                                   (512, 128)) * 0.02,
+    }
+    if quantized:
+        params = quant.tree_quantize(
+            params, bits=8, symmetric=True,
+            predicate=lambda p, l: l.ndim >= 2)
+    return params
+
+
+class TestRulesResolution:
+    def test_first_match_wins(self):
+        rules = ParamRules(groups=(
+            ParamGroup("a", pattern=r"w1"),
+            ParamGroup("b", pattern=r"blocks"),   # also matches w1's path
+        ))
+        assert rules.resolve("['blocks']['w1']").name == "a"
+        assert rules.resolve("['blocks']['w2']").name == "b"
+
+    def test_pattern_miss_falls_to_default(self):
+        rules = ParamRules(groups=(ParamGroup("a", pattern=r"nomatch"),))
+        g = rules.resolve("['blocks']['w1']")
+        assert g is DEFAULT_GROUP and g.name == "default"
+        assert not g.frozen and g.lr_scale == 1.0
+
+    def test_normalized_path_grammar(self):
+        # both the keystr and the /a/b/c grammar match
+        assert normalize_path("['seg0_dense']['attn']['wq']") == \
+            "/seg0_dense/attn/wq"
+        g = ParamGroup("x", pattern=r"/seg0_dense/attn/wq")
+        assert g.matches("['seg0_dense']['attn']['wq']")
+
+    def test_overrides_and_inherit(self):
+        base = QGaLoreConfig(rank=128, scale=0.25)
+        g = ParamGroup("x", rank=16)
+        eff = g.apply_to(base)
+        assert eff.rank == 16 and eff.scale == 0.25
+        # no overrides -> the base object itself (no spurious copies)
+        assert ParamGroup("y").apply_to(base) is base
+
+    def test_as_rules_normalization(self):
+        cfg = QGaLoreConfig()
+        rules = as_rules(cfg)
+        assert rules.base is cfg and rules.groups == ()
+        assert as_rules(rules) is rules
+        with pytest.raises(TypeError):
+            as_rules("qgalore")
+
+    def test_fingerprint_tracks_rule_changes(self):
+        r1 = ParamRules(groups=(ParamGroup("a", pattern="w1"),))
+        r2 = ParamRules(groups=(ParamGroup("a", pattern="w1", rank=4),))
+        assert r1.fingerprint() != r2.fingerprint()
+        assert r1.fingerprint() == ParamRules(
+            groups=(ParamGroup("a", pattern="w1"),)).fingerprint()
+
+    def test_fingerprint_ignores_strategy_and_recipe_knobs(self):
+        """Only STATE-STRUCTURAL fields participate: toggling execution
+        strategy (fused/batch/compress/dist_refresh) or non-structural
+        recipe knobs (scale, intervals, SR, lr_scale) must never refuse a
+        checkpoint resume."""
+        base = QGaLoreConfig()
+        fp = ParamRules(base=base).fingerprint()
+        for kw in (dict(fused_update=False), dict(batch_leaves=False),
+                   dict(compress_dp_grads=True), dict(dist_refresh=False),
+                   dict(scale=0.5), dict(update_interval=7),
+                   dict(stochastic_rounding=False), dict(weight_decay=0.1)):
+            assert ParamRules(base=replace(base, **kw)).fingerprint() \
+                == fp, kw
+        # structural changes DO flip it
+        for kw in (dict(rank=7), dict(weight_bits=0), dict(adam_bits=32),
+                   dict(min_dim=16)):
+            assert ParamRules(base=replace(base, **kw)).fingerprint() \
+                != fp, kw
+        # group lr_scale is non-structural; frozen is structural
+        assert ParamRules(groups=(ParamGroup("a", pattern="w1",
+                                             lr_scale=0.5),)).fingerprint() \
+            == ParamRules(groups=(ParamGroup("a",
+                                             pattern="w1"),)).fingerprint()
+        assert ParamRules(groups=(ParamGroup("a", pattern="w1",
+                                             frozen=True),)).fingerprint() \
+            != ParamRules(groups=(ParamGroup("a",
+                                             pattern="w1"),)).fingerprint()
+
+    def test_preset_rules_matches_preset(self):
+        for name in ("full", "adam8bit", "galore", "qgalore"):
+            assert preset_rules(name).base == preset(name)
+        assert preset_rules("qgalore").groups == ()
+
+
+class TestGroupAwareSpecs:
+    def test_per_group_rank_and_interval(self):
+        rules = ParamRules(
+            base=QGaLoreConfig(rank=16, min_dim=64, update_interval=200),
+            groups=(ParamGroup("hot", pattern=r"w1", rank=4,
+                               update_interval=50),))
+        specs = qgalore.leaf_specs(_toy_params(), rules)
+        w1 = next(s for s in specs if "w1" in s.path)
+        w2 = next(s for s in specs if "w2" in s.path)
+        assert w1.rank == 4 and w1.cfg.update_interval == 50
+        assert w2.rank == 16 and w2.cfg.update_interval == 200
+        assert w1.group == "hot" and w2.group == "default"
+
+    def test_frozen_group_not_galore(self):
+        rules = ParamRules(
+            base=QGaLoreConfig(rank=16, min_dim=64),
+            groups=(ParamGroup("frz", pattern=r"w1", frozen=True),))
+        specs = qgalore.leaf_specs(_toy_params(), rules)
+        w1 = next(s for s in specs if "w1" in s.path)
+        assert w1.frozen and not w1.galore and w1.rank == 0
+
+    def test_group_galore_disable(self):
+        rules = ParamRules(
+            base=QGaLoreConfig(rank=16, min_dim=64),
+            groups=(ParamGroup("plain", pattern=r"w1", enabled=False),))
+        specs = qgalore.leaf_specs(_toy_params(), rules)
+        w1 = next(s for s in specs if "w1" in s.path)
+        assert not w1.galore and not w1.frozen
+
+
+class TestGroupAwareOptimizer:
+    def _setup(self, rules):
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, rules)
+        state = qgalore.init(params, rules, jax.random.PRNGKey(3))
+        grads = quant.tree_dequantize(params, jnp.float32)
+        return params, specs, state, grads
+
+    def test_frozen_leaves_zero_state_and_passthrough(self):
+        rules = ParamRules(
+            base=preset("qgalore", QGaLoreConfig(rank=16, min_dim=64)),
+            groups=(ParamGroup("frz", pattern=r"embed|w2", frozen=True),))
+        params, specs, state, grads = self._setup(rules)
+        inner = jax.tree_util.tree_flatten(
+            state.inner, is_leaf=qgalore._is_inner_leaf)[0]
+        proj = jax.tree_util.tree_flatten(
+            state.proj,
+            is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0]
+        for i, s in enumerate(specs):
+            if s.frozen:
+                assert inner[i] is None and proj[i] is None
+        new_p, new_s, _ = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=rules, specs=specs))(
+            params, grads, state, lr=1e-2, rng=jax.random.PRNGKey(0))
+        for name in ("embed",):
+            a = quant.dequantize(params[name])
+            b = quant.dequantize(new_p[name])
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # trainable leaves moved
+        w1a = quant.dequantize(params["blocks"]["w1"])
+        w1b = quant.dequantize(new_p["blocks"]["w1"])
+        assert float(jnp.abs(w1a - w1b).max()) > 0
+
+    def test_default_rules_bit_identical_to_plain_config(self):
+        cfg = preset("qgalore", QGaLoreConfig(rank=16, min_dim=64))
+        params, specs_c, state_c, grads = self._setup(as_rules(cfg))
+        _, specs_r, state_r, _ = self._setup(ParamRules(base=cfg))
+        rng = jax.random.PRNGKey(5)
+        pa, sa, _ = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=cfg, specs=specs_c))(
+            params, grads, state_c, lr=1e-2, rng=rng)
+        pb, sb, _ = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=ParamRules(base=cfg),
+            specs=specs_r))(params, grads, state_r, lr=1e-2, rng=rng)
+        for a, b in zip(jax.tree_util.tree_leaves((pa, sa)),
+                        jax.tree_util.tree_leaves((pb, sb))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_lr_scale_group(self):
+        # fp weights (galore preset) so a zero effective lr leaves the
+        # leaf EXACTLY unchanged (no requantization involved)
+        base = preset("galore", QGaLoreConfig(rank=16, min_dim=64))
+        r_full = ParamRules(base=base)
+        r_slow = ParamRules(base=base, groups=(
+            ParamGroup("slow", pattern=r"w1", lr_scale=0.0),))
+        params = _toy_params(quantized=False)
+        grads = jax.tree_util.tree_map(lambda x: x.astype(jnp.float32),
+                                       params)
+        rng = jax.random.PRNGKey(9)
+        outs = {}
+        for name, rules in (("full", r_full), ("slow", r_slow)):
+            specs = qgalore.leaf_specs(params, rules)
+            state = qgalore.init(params, rules, jax.random.PRNGKey(3))
+            outs[name], _, _ = jax.jit(functools.partial(
+                qgalore.apply_updates, cfg=rules, specs=specs))(
+                params, grads, state, lr=1e-2, rng=rng)
+        # lr_scale=0 -> w1 exactly unchanged; unit scale moved it
+        np.testing.assert_array_equal(
+            np.asarray(outs["slow"]["blocks"]["w1"]),
+            np.asarray(params["blocks"]["w1"]))
+        assert np.abs(np.asarray(outs["full"]["blocks"]["w1"])
+                      - np.asarray(params["blocks"]["w1"])).max() > 0
+        # other leaves identical between the two rule-sets
+        np.testing.assert_array_equal(
+            np.asarray(outs["full"]["blocks"]["w2"]),
+            np.asarray(outs["slow"]["blocks"]["w2"]))
+
+    def test_memory_report_frozen_zero_opt_bytes(self):
+        params = _toy_params()
+        base = preset("qgalore", QGaLoreConfig(rank=16, min_dim=64))
+        all_frozen = ParamRules(base=base, groups=(
+            ParamGroup("frz", pattern="", frozen=True),))
+        rep_all = qgalore.memory_report(params, base)
+        rep_frz = qgalore.memory_report(params, all_frozen)
+        assert rep_frz["optimizer_gb"] == 0.0
+        assert rep_frz["weights_gb"] == rep_all["weights_gb"]
+        assert rep_frz["total_gb"] < rep_all["total_gb"]
+
+
+class TestTransformParity:
+    """The stage-by-stage chain is bit-identical to the monolith with the
+    fusion/batching strategy flags off — the chain IS the optimizer, the
+    monolith is its fused executor."""
+
+    def _cfg(self, **kw):
+        return preset("qgalore", QGaLoreConfig(
+            rank=8, min_dim=64, fused_update=False, batch_leaves=False,
+            **kw))
+
+    @pytest.mark.parametrize("refresh", [False, True])
+    def test_reference_chain_matches_monolith(self, refresh):
+        cfg = self._cfg()
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, cfg)
+        grads = quant.tree_dequantize(params, jnp.float32)
+        state = qgalore.init(params, cfg, jax.random.PRNGKey(1))
+        tx = transform.qgalore_reference_chain(cfg)
+        cst = tx.init(params, jax.random.PRNGKey(1))
+        masks = {i: jnp.ones((s.nbatch,), bool)
+                 for i, s in enumerate(specs) if s.galore} if refresh \
+            else None
+        rng = jax.random.PRNGKey(7)
+        pa, sa, ma = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=cfg, specs=specs,
+            refresh=refresh))(params, grads, state, lr=1e-2, rng=rng,
+                              refresh_masks=masks)
+        pb, sb, mb = jax.jit(functools.partial(
+            tx.update, specs=specs, refresh=refresh))(
+            grads, cst, params, lr=1e-2, rng=rng, refresh_masks=masks)
+        for a, b in zip(jax.tree_util.tree_leaves(pa),
+                        jax.tree_util.tree_leaves(pb)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # stage states: project's P == state.proj; adam's == state.inner
+        for a, b in zip(jax.tree_util.tree_leaves(sa.proj),
+                        jax.tree_util.tree_leaves(sb.stages[0])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        for a, b in zip(jax.tree_util.tree_leaves(sa.inner),
+                        jax.tree_util.tree_leaves(sb.stages[1])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        if refresh:
+            assert set(ma["sims"]) == set(mb["sims"])
+            for k in ma["sims"]:
+                np.testing.assert_array_equal(np.asarray(ma["sims"][k]),
+                                              np.asarray(mb["sims"][k]))
+
+    def test_canonical_transform_is_fused_executor(self):
+        cfg = preset("qgalore", QGaLoreConfig(rank=8, min_dim=64))
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, cfg)
+        grads = quant.tree_dequantize(params, jnp.float32)
+        tx = transform.qgalore_transform(cfg, specs=specs)
+        state = tx.init(params, jax.random.PRNGKey(1))
+        assert isinstance(state, qgalore.QGaLoreState)
+        rng = jax.random.PRNGKey(7)
+        pa, sa, _ = jax.jit(functools.partial(
+            qgalore.apply_updates, cfg=cfg, specs=specs))(
+            params, grads, state, lr=1e-2, rng=rng)
+        pb, sb, _ = jax.jit(functools.partial(tx.update, specs=specs))(
+            grads, state, params, lr=1e-2, rng=rng)
+        for a, b in zip(jax.tree_util.tree_leaves((pa, sa)),
+                        jax.tree_util.tree_leaves((pb, sb))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_chain_with_clip_and_weight_decay_stages(self):
+        cfg = self._cfg()
+        rules = as_rules(cfg)
+        params = _toy_params()
+        grads = quant.tree_dequantize(params, jnp.float32)
+        tx = transform.chain(
+            transform.clip_global_norm(1.0),
+            transform.project(rules),
+            transform.quantized_adam(rules),
+            transform.backproject(rules),
+            transform.add_weight_decay(0.01),
+            transform.sr_requant(rules))
+        state = tx.init(params, jax.random.PRNGKey(0))
+        new_p, new_s, metrics = jax.jit(tx.update)(
+            grads, state, params, lr=1e-3, rng=jax.random.PRNGKey(2))
+        assert "grad_norm" in metrics
+        for leaf in jax.tree_util.tree_leaves(
+                quant.tree_dequantize(new_p)):
+            assert np.isfinite(np.asarray(leaf)).all()
+        assert int(new_s.count) == 1
+
+    def test_clip_excludes_frozen(self):
+        base = preset("qgalore", QGaLoreConfig(rank=8, min_dim=64))
+        rules = ParamRules(base=base, groups=(
+            ParamGroup("frz", pattern=r"embed", frozen=True),))
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, rules)
+        grads = quant.tree_dequantize(params, jnp.float32)
+        # inflate the frozen leaf's grad: must not affect the clip norm
+        grads["embed"] = grads["embed"] + 1e3
+        _, norm_f = transform.clip_by_global_norm(grads, 1.0, specs=specs)
+        specs_plain = qgalore.leaf_specs(params, base)
+        _, norm_p = transform.clip_by_global_norm(grads, 1.0,
+                                                  specs=specs_plain)
+        assert float(norm_f) < float(norm_p)
+        clipped, _ = transform.clip_by_global_norm(grads, 1.0, specs=specs)
+        np.testing.assert_array_equal(np.asarray(clipped["embed"]),
+                                      np.asarray(grads["embed"]))
+
+
+class TestPerGroupController:
+    def test_per_group_intervals(self):
+        params = _toy_params()
+        rules = ParamRules(
+            base=QGaLoreConfig(rank=16, min_dim=64, update_interval=10,
+                               adaptive=False),
+            groups=(ParamGroup("hot", pattern=r"w1", update_interval=5),))
+        specs = qgalore.leaf_specs(params, rules)
+        ctrl = adaptive.SubspaceController(specs, rules)
+        hot = next(i for i, s in enumerate(specs) if "w1" in s.path)
+        cold = next(i for i, s in enumerate(specs)
+                    if s.galore and i != hot)
+
+        refresh_steps = {hot: [], cold: []}
+        for step in range(20):
+            masks = ctrl.masks_for_step(step)
+            if masks:
+                sims = {specs[i].path: np.full((specs[i].nbatch,), 0.9)
+                        for i in masks}
+                for i in masks:
+                    refresh_steps[i].append(step)
+                ctrl.observe(step, masks, sims)
+        assert refresh_steps[hot] == [0, 5, 10, 15]
+        assert refresh_steps[cold] == [0, 10]
+
+    def test_per_group_adaptive_doubling(self):
+        params = _toy_params()
+        rules = ParamRules(
+            base=preset("qgalore", QGaLoreConfig(
+                rank=16, min_dim=64, update_interval=10, adaptive=True,
+                adaptive_k=1, cos_threshold=0.4)),
+            groups=(ParamGroup("noadapt", pattern=r"w1", adaptive=False),))
+        specs = qgalore.leaf_specs(params, rules)
+        ctrl = adaptive.SubspaceController(specs, rules)
+        for step in (0, 10, 20):
+            masks = ctrl.masks_for_step(step)
+            sims = {specs[i].path: np.full((specs[i].nbatch,), 0.95)
+                    for i in masks}
+            ctrl.observe(step, masks, sims)
+        summary = ctrl.interval_summary()
+        w1_path = next(s.path for s in specs if "w1" in s.path)
+        w2_path = next(s.path for s in specs
+                       if s.galore and "w1" not in s.path)
+        assert all(iv == 10 for iv in summary[w1_path])     # adaptive off
+        assert all(iv > 10 for iv in summary[w2_path])      # doubled
+
+    def test_baseline_svd_count_per_group(self):
+        params = _toy_params()
+        rules = ParamRules(
+            base=preset("qgalore", QGaLoreConfig(
+                rank=16, min_dim=64, update_interval=10)),
+            groups=(ParamGroup("hot", pattern=r"w1", update_interval=5),))
+        specs = qgalore.leaf_specs(params, rules)
+        ctrl = adaptive.SubspaceController(specs, rules)
+        hot_units = sum(len(us) for i, us in ctrl.units.items()
+                        if "w1" in specs[i].path)
+        cold_units = sum(len(us) for i, us in ctrl.units.items()
+                         if "w1" not in specs[i].path)
+        want = hot_units * (1 + 19 // 5) + cold_units * (1 + 19 // 10)
+        assert ctrl.baseline_svd_count(20) == want
