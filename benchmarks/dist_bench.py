@@ -77,12 +77,15 @@ def hlo_collective_bytes(compiled_text: str) -> dict:
 
 
 def analytic_payload_bytes(specs) -> dict:
-    """Per-step DP gradient-reduction payload (f32 words) from leaf specs."""
+    """Per-step DP gradient-reduction payload (f32 words) from leaf specs.
+    The compressed number is the canonical ``qgalore.dp_payload_bytes``
+    counter (also what the adaptive-rank ablation asserts on), so rank
+    overrides flow through here too."""
     import numpy as np
-    full = sum(int(np.prod(s.shape)) for s in specs)
-    comp = sum(int(np.prod(s.low_shape if s.galore else s.shape))
-               for s in specs)
-    return {"fullrank_bytes": full * 4, "compressed_bytes": comp * 4,
+    from repro.core import qgalore
+    full = 4 * sum(int(np.prod(s.shape)) for s in specs if not s.frozen)
+    comp = qgalore.dp_payload_bytes(specs)
+    return {"fullrank_bytes": full, "compressed_bytes": comp,
             "ratio": full / max(comp, 1)}
 
 

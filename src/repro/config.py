@@ -138,6 +138,18 @@ class QGaLoreConfig:
     beta2: float = 0.999
     eps: float = 1e-8
     weight_decay: float = 0.0
+    # dynamic rank adaptation (AdaRankGrad-style, arXiv:2410.17881): shrink
+    # a leaf's projection rank at runtime once the measured explained-
+    # variance ratio at the next-smaller rank stays above the threshold for
+    # `rank_patience` consecutive refreshes. OFF by default — the static-
+    # rank pipeline (and the committed golden fixture) is unchanged.
+    adaptive_rank: bool = False
+    # descending rank rungs, e.g. (128, 64, 32); empty = halve the current
+    # rank per transition. `min_rank` floors the ladder either way.
+    rank_ladder: Tuple[int, ...] = ()
+    explained_ratio_threshold: float = 0.95
+    rank_patience: int = 2
+    min_rank: int = 8
     # subspace method: "svd" (paper-faithful) | "randomized" (TPU-fast)
     subspace_method: str = "svd"
     subspace_iters: int = 2         # power iterations for randomized method

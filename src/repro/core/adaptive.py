@@ -67,6 +67,12 @@ class SubspaceController:
         self.cfg = self.rules.base
         self.specs = specs
         self.units: Dict[int, List[_Unit]] = {}
+        # dynamic rank adaptation (per-LEAF: a stacked leaf's units share
+        # one rank because the state arrays are stacked)
+        self.ranks: Dict[int, int] = {}
+        self.rank_streaks: Dict[int, int] = {}
+        self.transitions: List[dict] = []
+        self._pending: List[tuple] = []
         for idx, spec in enumerate(specs):
             if spec.galore:
                 eff = _eff_cfg(spec, self.rules)
@@ -74,9 +80,19 @@ class SubspaceController:
                     _Unit(interval=eff.update_interval)
                     for _ in range(spec.nbatch)
                 ]
+                self.ranks[idx] = spec.rank
+                self.rank_streaks[idx] = 0
+        self._orig_ranks = dict(self.ranks)
 
     def _cfg_for(self, idx: int) -> QGaLoreConfig:
         return _eff_cfg(self.specs[idx], self.rules)
+
+    def update_specs(self, specs: List[LeafSpec]) -> None:
+        """Swap in rebuilt (rank-overridden) specs after a migration; the
+        leaf set and ordering must be unchanged."""
+        if [s.path for s in specs] != [s.path for s in self.specs]:
+            raise ValueError("update_specs: leaf set changed")
+        self.specs = specs
 
     # -- scheduling ---------------------------------------------------------
     def masks_for_step(self, step: int) -> Dict[int, np.ndarray]:
@@ -93,8 +109,11 @@ class SubspaceController:
 
     # -- feedback -----------------------------------------------------------
     def observe(self, step: int, masks: Dict[int, np.ndarray],
-                sims: Dict[str, np.ndarray]) -> None:
-        """Consume the per-layer similarities returned by the refresh step."""
+                sims: Dict[str, np.ndarray],
+                ratios: Optional[Dict[str, np.ndarray]] = None) -> None:
+        """Consume the per-layer similarities (and, under dynamic rank
+        adaptation, the explained-variance profiles) returned by the
+        refresh step."""
         path_by_idx = {i: s.path for i, s in enumerate(self.specs)}
         for idx, mask in masks.items():
             sim_arr = sims.get(path_by_idx[idx])
@@ -118,6 +137,74 @@ class SubspaceController:
                     else:
                         unit.streak = 0
                 unit.next_refresh = step + unit.interval
+            if eff.adaptive_rank and ratios is not None:
+                self._observe_rank(step, idx, mask, eff,
+                                   ratios.get(path_by_idx[idx]))
+
+    # -- dynamic rank adaptation --------------------------------------------
+    def _next_rank(self, idx: int, eff: QGaLoreConfig) -> Optional[int]:
+        """The next rung below the leaf's CURRENT rank: the largest ladder
+        value strictly below it, or half of it with an empty ladder; None
+        once the floor ``min_rank`` would be crossed."""
+        cur = self.ranks[idx]
+        if eff.rank_ladder:
+            below = [r for r in eff.rank_ladder if r < cur]
+            target = max(below) if below else None
+        else:
+            target = cur // 2
+        if target is None or target < max(eff.min_rank, 1):
+            return None
+        return target
+
+    def _observe_rank(self, step: int, idx: int, mask, eff: QGaLoreConfig,
+                      ratio_arr) -> None:
+        """One refresh observation of a leaf's explained-variance profile:
+        the leaf's streak counts consecutive refreshes where EVERY refreshed
+        unit already explains >= threshold of its gradient energy at the
+        next-smaller rank; ``rank_patience`` such refreshes trigger a
+        shrink decision (picked up by the trainer via
+        :meth:`take_rank_decisions`)."""
+        if ratio_arr is None:
+            return
+        target = self._next_rank(idx, eff)
+        if target is None:
+            return
+        ratio_arr = np.asarray(ratio_arr).reshape(-1, self.ranks[idx])
+        vals = [float(ratio_arr[b, target - 1])
+                for b in range(ratio_arr.shape[0]) if mask[b]]
+        vals = [v for v in vals if v >= 0]
+        if not vals:
+            return
+        if min(vals) >= eff.explained_ratio_threshold:
+            self.rank_streaks[idx] += 1
+            if self.rank_streaks[idx] >= eff.rank_patience:
+                old = self.ranks[idx]
+                self.ranks[idx] = target
+                self.rank_streaks[idx] = 0
+                self.transitions.append(
+                    {"step": int(step), "path": self.specs[idx].path,
+                     "old": int(old), "new": int(target)})
+                self._pending.append((idx, old, target))
+        else:
+            self.rank_streaks[idx] = 0
+
+    def take_rank_decisions(self) -> List[tuple]:
+        """Drain pending (leaf_idx, old_rank, new_rank) shrink decisions —
+        the trainer migrates state and rebuilds execution for each."""
+        out, self._pending = self._pending, []
+        return out
+
+    def current_ranks(self) -> Dict[str, int]:
+        """{leaf path: rank} for leaves shrunk below their configured rank
+        — the override map persisted in checkpoint meta and fed to
+        ``qgalore.apply_rank_overrides``."""
+        return {self.specs[i].path: r for i, r in self.ranks.items()
+                if r != self._orig_ranks[i]}
+
+    def rank_transition_summary(self) -> List[dict]:
+        """The exact (step, path, old → new) shrink schedule of the run —
+        pinned by the adarank golden fixture."""
+        return [dict(t) for t in self.transitions]
 
     # -- accounting ---------------------------------------------------------
     def total_svd_count(self) -> int:
@@ -149,24 +236,60 @@ class SubspaceController:
     # -- checkpointing ------------------------------------------------------
     def to_json(self) -> str:
         blob = {
-            str(i): [
-                {"interval": u.interval, "next_refresh": u.next_refresh,
-                 "streak": u.streak, "svd_count": u.svd_count,
-                 "sims": u.sims[-16:]}
-                for u in us]
-            for i, us in self.units.items()
+            "units": {
+                str(i): [
+                    {"interval": u.interval,
+                     "next_refresh": u.next_refresh,
+                     "streak": u.streak, "svd_count": u.svd_count,
+                     "sims": u.sims[-16:]}
+                    for u in us]
+                for i, us in self.units.items()
+            },
+            "ranks": {str(i): r for i, r in self.ranks.items()},
+            "rank_streaks": {str(i): s
+                             for i, s in self.rank_streaks.items()},
+            "transitions": self.transitions,
         }
         return json.dumps(blob)
 
     def from_json(self, s: str) -> None:
+        """Restore controller state, STRICTLY: the serialized leaf set must
+        match this controller's exactly — unknown keys, missing keys, or a
+        per-leaf unit-count mismatch mean the checkpoint was written under
+        different specs (model/rules drift), and silently dropping entries
+        would resume with desynchronized refresh schedules. Accepts the
+        pre-rank-adaptation flat format (units only) for old checkpoints."""
         blob = json.loads(s)
-        for i_str, dumps in blob.items():
-            units = self.units.get(int(i_str))
-            if units is None:
-                continue
+        unit_blob = blob["units"] if "units" in blob else blob
+        want = {str(i) for i in self.units}
+        got = set(unit_blob)
+        if got != want:
+            raise ValueError(
+                "SubspaceController.from_json: serialized leaf set does "
+                f"not match the current specs (unknown={sorted(got - want)}"
+                f", missing={sorted(want - got)}) — the checkpoint was "
+                "written under different model/rules")
+        for i_str, dumps in unit_blob.items():
+            units = self.units[int(i_str)]
+            if len(dumps) != len(units):
+                raise ValueError(
+                    f"SubspaceController.from_json: leaf {i_str} has "
+                    f"{len(dumps)} serialized units, expected "
+                    f"{len(units)} (stacked-layer layout changed)")
             for u, d in zip(units, dumps):
                 u.interval = d["interval"]
                 u.next_refresh = d["next_refresh"]
                 u.streak = d["streak"]
                 u.svd_count = d["svd_count"]
                 u.sims = list(d.get("sims", []))
+        if "units" in blob:
+            for i_str, r in blob.get("ranks", {}).items():
+                if int(i_str) not in self.ranks:
+                    raise ValueError(
+                        f"SubspaceController.from_json: rank entry for "
+                        f"unknown leaf {i_str}")
+                self.ranks[int(i_str)] = int(r)
+            for i_str, st in blob.get("rank_streaks", {}).items():
+                self.rank_streaks[int(i_str)] = int(st)
+            self.transitions = [dict(t) for t in blob.get("transitions",
+                                                          [])]

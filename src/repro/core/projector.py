@@ -150,6 +150,33 @@ def subspace_similarity(P_old: jax.Array, P_new: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Explained-variance ratio (dynamic rank adaptation signal)
+# ---------------------------------------------------------------------------
+
+def explained_ratio(G: jax.Array, P: jax.Array, side: str) -> jax.Array:
+    """Cumulative explained-variance profile of ``G`` under ``P``: entry
+    ``k`` is ``||proj of G onto the first k+1 columns of P||_F^2 /
+    ||G||_F^2`` — for an exact-SVD ``P`` this is the prefix sum of
+    ``sigma_i^2 / sum_j sigma_j^2``, i.e. the top-(k+1) singular energy
+    over total. Shape ``(..., r)``; monotone non-decreasing in k, values in
+    ``[0, 1]``. The full-rank entry ``[..., -1]`` is invariant under any
+    rotation / sign flip / permutation of the P basis (it only depends on
+    the subspace); per-prefix entries assume singular-value-ordered columns
+    (what :func:`compute_subspace` produces), which is also what makes
+    rank-truncation ``P[..., :r']`` keep the TOP directions.
+    """
+    Gf = G.astype(jnp.float32)
+    Pf = P.astype(jnp.float32)
+    low = project(Gf, Pf, side)
+    # per-direction energies: column k of P owns axis -1 (right) / -2 (left)
+    axis = -2 if side == "right" else -1
+    energies = jnp.sum(low * low, axis=axis)          # (..., r)
+    total = jnp.sum(Gf * Gf, axis=(-2, -1))           # (...,)
+    cum = jnp.cumsum(energies, axis=-1)
+    return cum / jnp.maximum(total, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
 # Quantized projection helpers
 # ---------------------------------------------------------------------------
 

@@ -49,6 +49,7 @@ SR randoms input (see ``repro.kernels.ops``).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
@@ -231,9 +232,18 @@ def refresh_slice(g, P_flat, mask, idx, cfg: QGaLoreConfig, rank: int,
     inner leaf carrying leading dim b; ``mask``: (b,) bool; ``idx``: (b,)
     int32 GLOBAL unit indices — per-unit RNG folding uses the global index,
     so a layer-sharded (distributed) refresh draws the same randoms as the
-    replicated scan. Returns (P_new_flat, sims (b,)); sims = -1 where not
-    refreshed. Only masked entries pay the SVD (``lax.cond`` in the scan).
+    replicated scan. Returns (P_new_flat, sims (b,), ratios); sims = -1
+    where not refreshed. With ``cfg.adaptive_rank`` on, ``ratios`` is the
+    (b, rank) cumulative explained-variance profile of each refreshed
+    gradient under its FRESH (pre-quantization) projection (-1 rows where
+    not refreshed) — the same SVD pass feeds both signals, no extra
+    decomposition. With it off, ``ratios`` is None and the traced graph is
+    IDENTICAL to the pre-adaptive-rank one: even a dead extra einsum
+    changes XLA fusion enough to drift the similarity values by ulps,
+    which flips interval-doubling decisions the golden fixture pins. Only
+    masked entries pay the SVD (``lax.cond`` in the scan).
     """
+    want_ratios = cfg.adaptive_rank
 
     def body(carry, inp):
         g_b, P_b, mask_b, i = inp
@@ -246,20 +256,31 @@ def refresh_slice(g, P_flat, mask, idx, cfg: QGaLoreConfig, rank: int,
             sim = projector.subspace_similarity(
                 projector.maybe_dequantize(P_b), P_new)
             if cfg.proj_bits >= 16:
-                return P_new.astype(jnp.float32), sim
-            return (projector.quantize_projection(P_new, cfg.proj_bits,
-                                                  cfg.quant_block), sim)
+                P_out = P_new.astype(jnp.float32)
+            else:
+                P_out = projector.quantize_projection(P_new, cfg.proj_bits,
+                                                      cfg.quant_block)
+            if want_ratios:
+                return P_out, sim, projector.explained_ratio(g_b, P_new,
+                                                             side)
+            return P_out, sim
 
         def keep(_):
+            if want_ratios:
+                return (P_b, jnp.float32(-1.0),
+                        jnp.full((rank,), -1.0, jnp.float32))
             return P_b, jnp.float32(-1.0)
 
-        P_out, sim = jax.lax.cond(mask_b, do_refresh, keep, operand=None)
-        return carry, (P_out, sim)
+        return carry, jax.lax.cond(mask_b, do_refresh, keep, operand=None)
 
-    _, (P_new_flat, sims) = jax.lax.scan(
+    _, outs = jax.lax.scan(
         body, 0, (g.astype(jnp.float32), P_flat, mask.astype(bool),
                   idx.astype(jnp.int32)))
-    return P_new_flat, sims
+    if want_ratios:
+        P_new_flat, sims, ratios = outs
+    else:
+        (P_new_flat, sims), ratios = outs, None
+    return P_new_flat, sims, ratios
 
 
 def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
@@ -267,8 +288,9 @@ def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
     """Recompute P for the masked batch entries of one leaf.
 
     grad_full: (batch..., m, n); P_old: QTensor/array (batch..., d, r);
-    mask: (nbatch,) bool. Returns (P_new, sims (nbatch,)).
-    sims = -1 where not refreshed.
+    mask: (nbatch,) bool. Returns (P_new, sims (nbatch,), ratios) where
+    ratios is (nbatch, r) under ``cfg.adaptive_rank`` and None otherwise;
+    sims/ratios = -1 where not refreshed.
     """
     b = spec.nbatch
     m, n = spec.mat_shape
@@ -276,14 +298,14 @@ def _refresh_leaf(grad_full, P_old, mask, spec: LeafSpec,
     # flatten leading batch dims of every inner leaf (q / scale / zero)
     P_flat = jax.tree_util.tree_map(
         lambda x: x.reshape((b,) + x.shape[len(spec.batch):]), P_old)
-    P_new_flat, sims = refresh_slice(
+    P_new_flat, sims, ratios = refresh_slice(
         g, P_flat, mask, jnp.arange(b, dtype=jnp.int32), cfg, spec.rank,
         spec.side, key)
     # restore original leading batch dims, leaf-wise (works for QTensor and
     # plain arrays alike — aux metadata is preserved by the scan/cond).
     P_new = jax.tree_util.tree_map(
         lambda new, old: new.reshape(old.shape), P_new_flat, P_old)
-    return P_new, sims
+    return P_new, sims, ratios
 
 
 # ---------------------------------------------------------------------------
@@ -361,7 +383,7 @@ def _update_leaf_fused(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
         new_param, m_new, v_new = fused(param, low, m32, v32, P, count, lr,
                                         key)
     new_inner = adam8bit.pack_moments(m_new, v_new, hyper)
-    return new_param, new_inner, P, None
+    return new_param, new_inner, P, None, None
 
 
 def _apply_weight_update(param, direction_or_upd, P_deq, spec: LeafSpec,
@@ -397,19 +419,21 @@ def _apply_weight_update(param, direction_or_upd, P_deq, spec: LeafSpec,
 
 def _update_leaf(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
                  cfg: QGaLoreConfig, lr, count, mask, key, refresh: bool):
-    """Returns (new_param, new_inner, new_P, sim_array_or_None)."""
+    """Returns (new_param, new_inner, new_P, sims_or_None,
+    ratios_or_None)."""
     if not refresh and _fused_eligible(param, P, spec, cfg):
         return _update_leaf_fused(param, grad, inner, P, spec, cfg, lr,
                                   count, key)
     hyper = _hyper(cfg)
-    sims = None
+    sims = ratios = None
     new_P = P
     if spec.galore:
         if refresh:
             if _grad_is_lowrank(grad, spec):
                 raise ValueError(
                     f"refresh step needs full-rank grad for {spec.path}")
-            new_P, sims = _refresh_leaf(grad, P, mask, spec, cfg, key)
+            new_P, sims, ratios = _refresh_leaf(grad, P, mask, spec, cfg,
+                                                key)
         P_deq_full = projector.maybe_dequantize(new_P, jnp.float32)
         if _grad_is_lowrank(grad, spec):
             low = grad.astype(jnp.float32)
@@ -448,7 +472,7 @@ def _update_leaf(param, grad, inner: Adam8bitState, P, spec: LeafSpec,
             grad.astype(jnp.float32), inner, count, hyper)
         new_param = _apply_weight_update(param, direction, None, spec, cfg,
                                          lr, key)
-    return new_param, new_inner, new_P, sims
+    return new_param, new_inner, new_P, sims, ratios
 
 
 def _leaf_sig(x):
@@ -550,8 +574,8 @@ def _run_group(idxs, p_flat, g_flat, i_flat, pr_flat, spec: LeafSpec,
         else:
             p, g, inn, k = inp
             P_ = None
-        np_, ni_, _, _ = _update_leaf(p, g, inn, P_, spec, cfg, lr,
-                                      count, None, k, False)
+        np_, ni_, _, _, _ = _update_leaf(p, g, inn, P_, spec, cfg, lr,
+                                         count, None, k, False)
         # P is never refreshed inside a group (refresh leaves run singly)
         # — don't thread it through the scan outputs, which would copy
         # every grouped projection each step.
@@ -640,6 +664,7 @@ def apply_updates(
     count = state.count + 1
 
     sims_out: Dict[str, jax.Array] = {}
+    ratios_out: Dict[str, jax.Array] = {}
     refresh_masks = refresh_masks or {}
     n_leaves = len(p_flat)
 
@@ -683,12 +708,14 @@ def apply_updates(
         mask = refresh_masks.get(idx)
         if do_refresh and mask is None:
             mask = jnp.ones((spec.nbatch,), bool)
-        np_, ni_, npr_, sims = _update_leaf(
+        np_, ni_, npr_, sims, ratios = _update_leaf(
             param, grad, inner, P, spec, _eff_cfg(spec, rules),
             _lr_for(spec, lr), count, mask, key, do_refresh)
         results[idx] = (np_, ni_, npr_)
         if sims is not None:
             sims_out[spec.path] = sims
+        if ratios is not None:
+            ratios_out[spec.path] = ratios
 
     new_p = [results[i][0] for i in range(n_leaves)]
     new_i = [results[i][1] for i in range(n_leaves)]
@@ -700,7 +727,7 @@ def apply_updates(
         proj=jax.tree_util.tree_unflatten(treedef, new_pr),
         count=count,
     )
-    metrics = {"sims": sims_out}
+    metrics = {"sims": sims_out, "ratios": ratios_out}
     return new_params, new_state, metrics
 
 
@@ -708,16 +735,20 @@ def apply_updates(
 # Memory model (paper Tables 1/2, Fig. 5)
 # ---------------------------------------------------------------------------
 
-def memory_report(params, cfg, fp_state_bytes: int = 2) -> Dict[str, float]:
+def memory_report(params, cfg, fp_state_bytes: int = 2,
+                  specs: Optional[List[LeafSpec]] = None
+                  ) -> Dict[str, float]:
     """Analytic bytes for weights + optimizer states (the paper's 'estimated
     memory' columns count exactly these). Non-quantized Adam states are
     counted at BF16 (paper's baseline convention); pass 4 for true FP32.
 
     Group-aware: per-leaf ranks/bits come from the resolved param group and
     frozen-group leaves contribute their weights but ZERO optimizer bytes —
-    this is what the fine-tune entrypoint compares against QLoRA."""
+    this is what the fine-tune entrypoint compares against QLoRA. Pass
+    ``specs`` to account for runtime rank overrides (dynamic rank
+    adaptation) instead of re-deriving the static specs."""
     rules = as_rules(cfg)
-    specs = leaf_specs(params, rules)
+    specs = specs if specs is not None else leaf_specs(params, rules)
     flat = jax.tree_util.tree_flatten(params, is_leaf=quant.is_qtensor)[0]
     w_bytes = opt_bytes = proj_bytes = 0
     for leaf, spec in zip(flat, specs):
@@ -746,3 +777,99 @@ def memory_report(params, cfg, fp_state_bytes: int = 2) -> Dict[str, float]:
         "projection_gb": proj_bytes / 2**30,
         "total_gb": (w_bytes + opt_bytes + proj_bytes) / 2**30,
     }
+
+
+def optimizer_state_bytes(params, cfg,
+                          specs: Optional[List[LeafSpec]] = None) -> int:
+    """Total analytic optimizer-state bytes (moments + projections) —
+    the scalar the adaptive-rank ablation tracks step over step."""
+    rep = memory_report(params, cfg, specs=specs)
+    return int(round(rep["optimizer_gb"] * 2**30))
+
+
+def dp_payload_bytes(specs: List[LeafSpec]) -> int:
+    """Per-step compressed-DP gradient-reduction payload in bytes: galore
+    leaves all-reduce their LOW-RANK f32 gradient (project-before-allreduce,
+    see ``repro.train.step``), everything else ships full-rank f32. Rank
+    overrides from dynamic rank adaptation flow in through ``specs`` —
+    shrinking a leaf's rank shrinks its wire bytes proportionally."""
+    return 4 * sum(
+        int(np.prod(s.low_shape if s.galore else s.shape))
+        for s in specs if not s.frozen)
+
+
+# ---------------------------------------------------------------------------
+# Dynamic rank adaptation: spec overrides + low-rank state migration
+# ---------------------------------------------------------------------------
+
+def apply_rank_overrides(specs: List[LeafSpec],
+                         overrides: Dict[str, int]) -> List[LeafSpec]:
+    """Rebuild specs with per-path rank overrides (path → new rank).
+
+    Both ``spec.rank`` and the per-leaf effective config's ``rank`` are
+    replaced, so every downstream consumer — ``low_shape`` /
+    ``proj_shape``, the ``_group_sig`` batching signature, sharding
+    derivation, memory accounting — sees the shrunk rank. Ranks may only
+    shrink (truncation keeps the top singular directions; growing would
+    need information a smaller state no longer holds)."""
+    if not overrides:
+        return specs
+    unknown = set(overrides) - {s.path for s in specs}
+    if unknown:
+        raise ValueError(f"rank overrides for unknown leaves: "
+                         f"{sorted(unknown)}")
+    out = []
+    for spec in specs:
+        r = overrides.get(spec.path)
+        if r is None or r == spec.rank:
+            out.append(spec)
+            continue
+        if not spec.galore:
+            raise ValueError(
+                f"rank override on non-galore leaf {spec.path}")
+        if r > spec.rank:
+            raise ValueError(
+                f"rank override must shrink: {spec.path} "
+                f"{spec.rank} -> {r}")
+        cfg2 = spec.cfg if spec.cfg is None else \
+            dataclasses.replace(spec.cfg, rank=r)
+        out.append(dataclasses.replace(spec, rank=r, cfg=cfg2))
+    return out
+
+
+def truncate_lowrank(x, side: str, new_rank: int):
+    """Slice the leading ``new_rank`` directions out of a low-rank array
+    ``(batch..., m, r)`` (right) / ``(batch..., r, n)`` (left)."""
+    if side == "right":
+        return x[..., :new_rank]
+    return x[..., :new_rank, :]
+
+
+def migrate_rank_state(inner: Adam8bitState, P, spec: LeafSpec,
+                       new_rank: int, cfg=None):
+    """Shrink one galore leaf's optimizer state from ``spec.rank`` to
+    ``new_rank``: truncate the INT8 Adam moments and re-quantize the INT4
+    projection to the leading-``new_rank`` columns (projection columns are
+    singular-value-ordered, so truncation keeps the top directions — the
+    AdaRankGrad move). Deterministic (round-to-nearest requantization, no
+    SR), so migrate-then-checkpoint equals checkpoint-then-migrate
+    bit-for-bit. Returns ``(new_inner, new_P)`` shaped for the
+    ``apply_rank_overrides``'d spec."""
+    if not spec.galore:
+        raise ValueError(f"cannot migrate non-galore leaf {spec.path}")
+    if not 0 < new_rank < spec.rank:
+        raise ValueError(
+            f"{spec.path}: bad rank transition {spec.rank} -> {new_rank}")
+    eff = _eff_cfg(spec, cfg if cfg is not None else spec.cfg)
+    m32, v32 = adam8bit.moments_fp32(inner)
+    m32 = truncate_lowrank(m32, spec.side, new_rank)
+    v32 = truncate_lowrank(v32, spec.side, new_rank)
+    new_inner = adam8bit.pack_moments(m32, v32, _hyper(eff))
+    P_deq = projector.maybe_dequantize(P, jnp.float32)
+    P_trunc = P_deq[..., :new_rank]
+    if eff.proj_bits >= 16:
+        new_P = P_trunc.astype(jnp.float32)
+    else:
+        new_P = projector.quantize_projection(P_trunc, eff.proj_bits,
+                                              eff.quant_block)
+    return new_inner, new_P

@@ -59,6 +59,8 @@ OVERRIDE_FIELDS: Tuple[str, ...] = (
     "proj_bits", "weight_bits", "adam_bits", "stochastic_rounding",
     "weight_decay", "subspace_method", "subspace_iters",
     "min_dim", "galore_embeddings",
+    "adaptive_rank", "rank_ladder", "explained_ratio_threshold",
+    "rank_patience", "min_rank",
 )
 
 
@@ -89,6 +91,11 @@ class ParamGroup:
     subspace_iters: Optional[int] = None
     min_dim: Optional[int] = None
     galore_embeddings: Optional[bool] = None
+    adaptive_rank: Optional[bool] = None
+    rank_ladder: Optional[Tuple[int, ...]] = None
+    explained_ratio_threshold: Optional[float] = None
+    rank_patience: Optional[int] = None
+    min_rank: Optional[int] = None
 
     def matches(self, path: str) -> bool:
         if not self.pattern:

@@ -189,8 +189,12 @@ def project(cfg_or_rules) -> Stage:
                 mask = ctx.refresh_masks[idx]
                 if mask is None:
                     mask = jnp.ones((spec.nbatch,), bool)
-                P, sims = qgalore._refresh_leaf(g, P, mask, spec, eff, key)
+                P, sims, ratios = qgalore._refresh_leaf(g, P, mask, spec,
+                                                        eff, key)
                 ctx.metrics.setdefault("sims", {})[spec.path] = sims
+                if ratios is not None:
+                    ctx.metrics.setdefault("ratios", {})[spec.path] = \
+                        ratios
             new_P[idx] = P
             if qgalore._grad_is_lowrank(g, spec):
                 out[idx] = g.astype(jnp.float32)

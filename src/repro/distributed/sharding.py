@@ -234,7 +234,7 @@ def zero_axes_for(mesh: Mesh) -> Tuple[str, ...]:
 
 
 def opt_state_sharding(params, opt_state, cfg, mesh: Mesh,
-                       zero_axes: Tuple[str, ...] = ()):
+                       zero_axes: Tuple[str, ...] = (), specs=None):
     """Sharding pytree for a QGaLoreState aligned with ``params``.
 
     ``cfg``: QGaLoreConfig or ParamRules — per-leaf galore/rank decisions
@@ -244,8 +244,13 @@ def opt_state_sharding(params, opt_state, cfg, mesh: Mesh,
     ``zero_axes``: DP mesh axes to additionally partition the Adam moments
     and projection matrices over (ZeRO-style optimizer-state sharding).
     Empty tuple = the pre-existing model-axis-only behavior.
+
+    ``specs``: pre-resolved (possibly rank-overridden) leaf specs; the
+    divisibility-aware ZeRO dim choice re-runs against the actual (shrunk)
+    state shapes, so a rank transition re-shards cleanly.
     """
-    specs = qgalore.leaf_specs(params, cfg)
+    if specs is None:
+        specs = qgalore.leaf_specs(params, cfg)
     flat, treedef = jax.tree_util.tree_flatten_with_path(
         params, is_leaf=quant.is_qtensor)
     inner_flat = jax.tree_util.tree_flatten(

@@ -24,6 +24,17 @@ def main():
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--rank", type=int, default=128)
+    ap.add_argument("--adaptive-rank", action="store_true",
+                    help="dynamic per-layer rank adaptation: shrink a "
+                         "leaf's rank down the --rank-ladder when its "
+                         "explained-variance ratio holds above "
+                         "--rank-threshold for --rank-patience refreshes")
+    ap.add_argument("--rank-ladder", default="",
+                    help="comma-separated shrink rungs, e.g. 64,32 "
+                         "(empty = halve)")
+    ap.add_argument("--rank-threshold", type=float, default=0.95)
+    ap.add_argument("--rank-patience", type=int, default=2)
+    ap.add_argument("--min-rank", type=int, default=8)
     ap.add_argument("--optimizer", default="qgalore")
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--compress", action="store_true",
@@ -70,9 +81,13 @@ def main():
     bundle = model_zoo.build_arch(args.arch, smoke=args.smoke,
                                   dtype=jnp.float32 if args.smoke
                                   else jnp.bfloat16)
+    ladder = tuple(int(x) for x in args.rank_ladder.split(",") if x)
     qcfg = preset(args.optimizer, QGaLoreConfig(
         rank=args.rank, min_dim=64 if args.smoke else 128,
-        compress_dp_grads=args.compress))
+        compress_dp_grads=args.compress,
+        adaptive_rank=args.adaptive_rank, rank_ladder=ladder,
+        explained_ratio_threshold=args.rank_threshold,
+        rank_patience=args.rank_patience, min_rank=args.min_rank))
     tcfg = TrainConfig(global_batch=args.batch, seq_len=args.seq,
                        steps=args.steps, learning_rate=args.lr,
                        warmup_steps=max(args.steps // 20, 1), log_every=10,
@@ -98,6 +113,15 @@ def main():
     print(f"final loss {hist[-1]['loss']:.4f}; "
           f"SVD used {trainer.controller.total_svd_count()} / "
           f"{trainer.controller.baseline_svd_count(args.steps)} baseline")
+    if args.adaptive_rank:
+        from repro.core import qgalore
+        for t in trainer.controller.rank_transition_summary():
+            print(f"rank transition: step {t['step']} {t['path']} "
+                  f"{t['old']} -> {t['new']}")
+        bytes_now = qgalore.optimizer_state_bytes(
+            trainer.state.params, trainer.rules, specs=trainer.specs)
+        print(f"optimizer state {bytes_now / 2**20:.2f} MB; "
+              f"DP payload {qgalore.dp_payload_bytes(trainer.specs)} B/step")
 
 
 if __name__ == "__main__":

@@ -44,10 +44,26 @@ _STEP_RE = re.compile(r"^step_(\d{8})$")
 
 
 def check_rules_compat(meta: Dict, fingerprint: str,
-                       groups: Optional[Dict[str, str]] = None) -> None:
+                       groups: Optional[Dict[str, str]] = None,
+                       adaptive_rank: Optional[bool] = None) -> None:
     """Refuse to adopt a checkpoint written under different param-group
     rules. Old checkpoints (no ``rules_fingerprint`` in meta) pass — they
-    predate the group system and carry full per-leaf state."""
+    predate the group system and carry full per-leaf state.
+
+    ``adaptive_rank``: the restoring run's dynamic-rank setting. A
+    checkpoint holding rank-SHRUNK optimizer state (non-empty
+    ``rank_overrides`` in meta) cannot be adopted by a run with rank
+    adaptation off — it would build full-rank abstract state and fail on
+    array shapes; fail loudly HERE, meta-first."""
+    shrunk = meta.get("rank_overrides") or {}
+    if shrunk and adaptive_rank is False:
+        ov = sorted(shrunk.items())[:8]
+        raise ValueError(
+            "checkpoint holds rank-shrunk optimizer state "
+            f"(rank_overrides={ov}) but this run has adaptive_rank "
+            "disabled — it cannot adopt the shrunk low-rank moments / "
+            "projections. Enable QGaLoreConfig.adaptive_rank (or restore "
+            "a pre-transition checkpoint).")
     saved = meta.get("rules_fingerprint")
     if saved is None:
         return

@@ -76,17 +76,20 @@ def prepare_params(params, qcfg, param_dtype=jnp.bfloat16):
 
 
 def init_state(bundle: ModelBundle, qcfg, key,
-               param_dtype=jnp.bfloat16) -> TrainState:
+               param_dtype=jnp.bfloat16, specs=None) -> TrainState:
     params = prepare_params(bundle.init_params(key), qcfg, param_dtype)
-    opt = qgalore.init(params, qcfg, jax.random.fold_in(key, 1))
+    opt = qgalore.init(params, qcfg, jax.random.fold_in(key, 1),
+                       specs=specs)
     return TrainState(params, opt)
 
 
 def abstract_state(bundle: ModelBundle, qcfg,
-                   param_dtype=jnp.bfloat16) -> TrainState:
-    """eval_shape'd TrainState (no allocation) — for sharding and dry-run."""
+                   param_dtype=jnp.bfloat16, specs=None) -> TrainState:
+    """eval_shape'd TrainState (no allocation) — for sharding and dry-run.
+    ``specs`` carries runtime rank overrides (dynamic rank adaptation), so
+    the abstract low-rank state matches a shrunk checkpoint."""
     return jax.eval_shape(
-        lambda k: init_state(bundle, qcfg, k, param_dtype),
+        lambda k: init_state(bundle, qcfg, k, param_dtype, specs),
         jax.random.PRNGKey(0))
 
 
@@ -107,7 +110,7 @@ def build_train_step(bundle: ModelBundle, qcfg,
                      accum: int = 1, param_dtype=jnp.bfloat16,
                      mesh=None, dp_compress: bool = False,
                      moe_ep_axis=None, state_shardings=None,
-                     zero2_dims=None):
+                     zero2_dims=None, specs=None):
     """Returns ``step(state, batch, lr, rng, refresh_masks) -> (state,
     metrics)`` with ``refresh`` a static flag baked per variant via
     functools.partial before jit.
@@ -160,7 +163,8 @@ def build_train_step(bundle: ModelBundle, qcfg,
     """
     rules = as_rules(qcfg)
     base = rules.base
-    specs = _specs_for(bundle, rules, param_dtype)
+    if specs is None:
+        specs = _specs_for(bundle, rules, param_dtype)
     tx = transform.qgalore_transform(rules, specs=specs)
     any_galore = any(s.galore for s in specs)
     seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
@@ -386,7 +390,7 @@ def build_train_step(bundle: ModelBundle, qcfg,
             out_specs=(P(), P(), grads_specs),
             check_vma=False)(params, proj_trees, batch)
         if not dist_now:
-            return loss, metrics, grads, {}, {}
+            return loss, metrics, grads, {}, {}, {}
 
         # ---- distributed refresh, phase 2: per-owner SVD + broadcast ----
         # A SECOND region, manual over ALL mesh axes: the mask-gated SVD
@@ -400,7 +404,7 @@ def build_train_step(bundle: ModelBundle, qcfg,
         gd = {str(i): g_flat2[i] for i in dist_now}
 
         def refresh_inner(gd, pd, md, key, sid):
-            new_low, new_proj, sims = {}, {}, {}
+            new_low, new_proj, sims, ratios = {}, {}, {}, {}
             for i in dist_now:
                 sp = specs[i]
                 b_loc = sp.nbatch // dp_size
@@ -415,7 +419,7 @@ def build_train_step(bundle: ModelBundle, qcfg,
                 # IS this shard's flat index (lax.axis_index lowers to
                 # PartitionId, which XLA:CPU rejects — see repro.compat).
                 idx = jnp.arange(b_loc, dtype=jnp.int32) + sid[0] * b_loc
-                P_new_flat, sim_loc = qgalore.refresh_slice(
+                P_new_flat, sim_loc, ratio_loc = qgalore.refresh_slice(
                     g_loc, P_flat, mask_flat, idx,
                     qgalore._eff_cfg(sp, rules), sp.rank,
                     sp.side, jax.random.fold_in(key, i))
@@ -428,24 +432,30 @@ def build_train_step(bundle: ModelBundle, qcfg,
                     lambda x: gather(x).reshape(sp.batch + x.shape[1:]),
                     P_new_flat)
                 sims[sp.path] = gather(sim_loc)
-            return new_low, new_proj, sims
+                if ratio_loc is not None:
+                    ratios[sp.path] = gather(ratio_loc)
+            return new_low, new_proj, sims, ratios
 
         shard0 = lambda t: jax.tree_util.tree_map(
             lambda x: P(dp_axes, *([None] * (x.ndim - 1))), t)
         repl = lambda t: jax.tree_util.tree_map(lambda _: P(), t)
         sims_out_specs = {specs[i].path: P() for i in dist_now}
+        ratios_out_specs = {
+            specs[i].path: P() for i in dist_now
+            if qgalore._eff_cfg(specs[i], rules).adaptive_rank}
         shard_ids = jnp.arange(dp_size, dtype=jnp.int32)
-        new_low, new_proj, sims = shard_map(
+        new_low, new_proj, sims, ratios = shard_map(
             refresh_inner, mesh=mesh, axis_names=None,
             in_specs=(shard0(gd), shard0(refresh_proj),
                       shard0(refresh_masks), P(), P(dp_axes)),
-            out_specs=(repl(gd), repl(refresh_proj), sims_out_specs),
+            out_specs=(repl(gd), repl(refresh_proj), sims_out_specs,
+                       ratios_out_specs),
             check_vma=False)(gd, refresh_proj, refresh_masks, rng,
                              shard_ids)
         for i in dist_now:
             g_flat2[i] = new_low[str(i)]
         grads = jax.tree_util.tree_unflatten(g_treedef2, g_flat2)
-        return loss, metrics, grads, new_proj, sims
+        return loss, metrics, grads, new_proj, sims, ratios
 
     def step(state: TrainState, batch, lr, rng,
              refresh_masks: Optional[Dict[int, jax.Array]] = None,
@@ -465,6 +475,7 @@ def build_train_step(bundle: ModelBundle, qcfg,
                     proj_trees[k] = sub
 
         dist_sims: Dict[str, jax.Array] = {}
+        dist_ratios: Dict[str, jax.Array] = {}
         if dp_axes:
             dist_idx = [i for i in sorted(dist_refresh_ok)
                         if refresh and refresh_masks and i in refresh_masks]
@@ -478,7 +489,8 @@ def build_train_step(bundle: ModelBundle, qcfg,
                 rp = {str(i): pr_flat[i] for i in dist_idx}
                 rm = {str(i): jnp.asarray(refresh_masks[i]).reshape(
                     specs[i].batch) for i in dist_idx}
-                loss, metrics, grads, new_proj, dist_sims = grad_phase_dp(
+                (loss, metrics, grads, new_proj, dist_sims,
+                 dist_ratios) = grad_phase_dp(
                     params, proj_trees, batch, refresh_proj=rp,
                     refresh_masks=rm, rng=rng)
                 for i in dist_idx:
@@ -488,7 +500,7 @@ def build_train_step(bundle: ModelBundle, qcfg,
                 refresh_masks = {i: m for i, m in refresh_masks.items()
                                  if i not in set(dist_idx)}
             else:
-                loss, metrics, grads, _, _ = grad_phase_dp(
+                loss, metrics, grads, _, _, _ = grad_phase_dp(
                     params, proj_trees, batch)
         else:
             loss, metrics, grads = grad_phase(params, proj_trees, batch)
@@ -502,7 +514,9 @@ def build_train_step(bundle: ModelBundle, qcfg,
         if dist_sims:
             opt_metrics = {**opt_metrics,
                            "sims": {**dist_sims,
-                                    **opt_metrics.get("sims", {})}}
+                                    **opt_metrics.get("sims", {})},
+                           "ratios": {**dist_ratios,
+                                      **opt_metrics.get("ratios", {})}}
         metrics = {**metrics, "loss": loss, "grad_norm": gnorm,
                    "lr": jnp.asarray(lr, jnp.float32)}
         return TrainState(new_params, new_opt), metrics, opt_metrics

@@ -108,25 +108,56 @@ class Trainer:
                 f"zero_shard={zero_shard}, "
                 f"compress_dp_grads={self.qcfg.compress_dp_grads}")
 
-        # sharding first: the step consumes the layouts (scan-carry
-        # annotations) and the ZeRO-2 scatter dims derived from them
+        self._accum = accum
+        self._dp_compress = dp_compress
+        self._rank_overrides: Dict[str, int] = {}
+        self._build_execution()
+
+        self.controller = adaptive.SubspaceController(self._base_specs,
+                                                      self.rules)
+        self.mgr = None
+        if tcfg.checkpoint_dir:
+            self.mgr = ckpt_lib.CheckpointManager(
+                tcfg.checkpoint_dir, max_to_keep=tcfg.keep_checkpoints,
+                async_save=tcfg.async_checkpoint)
+
+        self.state = step_lib.init_state(
+            bundle, self.rules, jax.random.PRNGKey(tcfg.seed), param_dtype,
+            specs=self.specs)
+        if self.state_sharding is not None:
+            self.state = jax.device_put(self.state, self.state_sharding)
+        self.start_step = 0
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def _build_execution(self):
+        """(Re)derive specs / shardings / the compiled step pair under the
+        current rank overrides. Called at construction (no overrides), when
+        a restore brings in a shrunk checkpoint's overrides, and after each
+        runtime rank migration — a rank change alters state shapes, the
+        batching signatures, the ZeRO layout, and the DP wire payload, so
+        the whole execution stack is rebuilt (two fresh jit variants)."""
+        self._base_specs = step_lib._specs_for(self.bundle, self.rules,
+                                               self.param_dtype)
+        self.specs = qgalore.apply_rank_overrides(self._base_specs,
+                                                  self._rank_overrides)
+        mesh, tcfg = self.mesh, self.tcfg
         self.state_sharding = None
         self._batch_sharding = None
         zero2_dims = None
         if mesh is not None:
             from repro.distributed import sharding as sh
-            abs_state = step_lib.abstract_state(bundle, self.rules,
-                                                param_dtype)
-            zaxes = sh.zero_axes_for(mesh) if zero_shard else ()
+            abs_state = self._abstract_state()
+            zaxes = sh.zero_axes_for(mesh) if self.zero_shard else ()
             self.state_sharding = step_lib.TrainState(
                 sh.param_sharding(abs_state.params, mesh),
                 sh.opt_state_sharding(abs_state.params, abs_state.opt,
-                                      self.rules, mesh, zero_axes=zaxes))
-            if self.zero2 and zaxes and dp_compress:
-                abs_specs = qgalore.leaf_specs(abs_state.params, self.rules)
+                                      self.rules, mesh, zero_axes=zaxes,
+                                      specs=self.specs))
+            if self.zero2 and zaxes and self._dp_compress:
                 zero2_dims = sh.zero2_scatter_dims(
-                    self.state_sharding.opt, abs_specs, zaxes)
-            elif self.zero2 and zaxes and not dp_compress:
+                    self.state_sharding.opt, self.specs, zaxes)
+            elif self.zero2 and zaxes and not self._dp_compress:
                 # zero_shard-implied default that can't take effect —
                 # say so rather than silently keeping the pmean path
                 log.info("zero2 inactive: compress_dp_grads is off (the "
@@ -134,16 +165,19 @@ class Trainer:
                          "shard_map); pass --compress / "
                          "compress_dp_grads=True to enable it")
 
-        raw_step, self.specs = step_lib.build_train_step(
-            bundle, self.rules, tcfg, impl=impl, accum=accum,
-            param_dtype=param_dtype, mesh=mesh, dp_compress=dp_compress,
-            state_shardings=self.state_sharding, zero2_dims=zero2_dims)
+        raw_step, _ = step_lib.build_train_step(
+            self.bundle, self.rules, tcfg, impl=self.impl,
+            accum=self._accum, param_dtype=self.param_dtype, mesh=mesh,
+            dp_compress=self._dp_compress,
+            state_shardings=self.state_sharding, zero2_dims=zero2_dims,
+            specs=self.specs)
         self._raw_step = raw_step
 
         if mesh is not None:
-            # `sh` / batch_for_bundle already bound above (same condition)
+            from repro.distributed import sharding as sh
             batch_abs = jax.eval_shape(
-                lambda: batch_for_bundle(bundle, self.cell, 0, tcfg.seed))
+                lambda: batch_for_bundle(self.bundle, self.cell, 0,
+                                         tcfg.seed))
             self._batch_sharding = sh.data_sharding(batch_abs, mesh)
             rep = sh.replicated(mesh)
             # positional wrappers: jit in_shardings rejects kwargs, and the
@@ -168,37 +202,37 @@ class Trainer:
                 functools.partial(raw_step, refresh=True),
                 static_argnames=())
 
-        self.controller = adaptive.SubspaceController(self.specs,
-                                                      self.rules)
-        self.mgr = None
-        if tcfg.checkpoint_dir:
-            self.mgr = ckpt_lib.CheckpointManager(
-                tcfg.checkpoint_dir, max_to_keep=tcfg.keep_checkpoints,
-                async_save=tcfg.async_checkpoint)
-
-        self.state = step_lib.init_state(
-            bundle, self.rules, jax.random.PRNGKey(tcfg.seed), param_dtype)
-        if self.state_sharding is not None:
-            self.state = jax.device_put(self.state, self.state_sharding)
-        self.start_step = 0
-        self.history: List[Dict[str, float]] = []
-
-    # ------------------------------------------------------------------
     def _abstract_state(self):
         return step_lib.abstract_state(self.bundle, self.rules,
-                                       self.param_dtype)
+                                       self.param_dtype, specs=self.specs)
+
+    def _adaptive_rank_enabled(self) -> bool:
+        return self.qcfg.adaptive_rank or any(
+            g.adaptive_rank for g in self.rules.groups)
 
     def maybe_restore(self) -> int:
         if self.mgr is None or self.mgr.latest_step() is None:
             return 0
         # group-metadata compatibility FIRST (meta only, no arrays): a
-        # checkpoint written under different param-group rules has
-        # differently-shaped (or missing) optimizer state per leaf — fail
-        # with the loud rules-mismatch error, not a missing-leaf KeyError
-        # from the array restore.
-        ckpt_lib.check_rules_compat(self.mgr.read_meta(),
-                                    self.rules.fingerprint(),
-                                    group_assignment(self.specs))
+        # checkpoint written under different param-group rules (or holding
+        # rank-shrunk state this run cannot adapt to) has differently-
+        # shaped (or missing) optimizer state per leaf — fail with the
+        # loud meta-mismatch error, not a shape error from the array
+        # restore.
+        meta = self.mgr.read_meta()
+        ckpt_lib.check_rules_compat(meta, self.rules.fingerprint(),
+                                    group_assignment(self._base_specs),
+                                    adaptive_rank=
+                                    self._adaptive_rank_enabled())
+        # adopt the checkpoint's rank overrides before touching arrays:
+        # the abstract state / shardings / compiled steps must describe
+        # the SHRUNK shapes the checkpoint actually holds
+        overrides = {str(k): int(v)
+                     for k, v in (meta.get("rank_overrides") or {}).items()}
+        if overrides != self._rank_overrides:
+            self._rank_overrides = overrides
+            self._build_execution()
+            self.controller.update_specs(self.specs)
         # state_sharding may describe a different mesh than the checkpoint
         # was saved on — restore is elastic (arrays are host-gathered at
         # save; device_put here re-places them under the current rules)
@@ -217,7 +251,8 @@ class Trainer:
         self.mgr.save(step, self.state,
                       {"controller": self.controller.to_json(),
                        "rules_fingerprint": self.rules.fingerprint(),
-                       "groups": group_assignment(self.specs)})
+                       "groups": group_assignment(self._base_specs),
+                       "rank_overrides": self.controller.current_ranks()})
 
     # ------------------------------------------------------------------
     def _run_one(self, step: int):
@@ -243,11 +278,49 @@ class Trainer:
                 self.state, batch, lr, rng, jmasks)
             sims = {k: np.asarray(v)
                     for k, v in opt_metrics.get("sims", {}).items()}
-            self.controller.observe(step, masks, sims)
+            ratios = {k: np.asarray(v)
+                      for k, v in opt_metrics.get("ratios", {}).items()}
+            self.controller.observe(step, masks, sims, ratios)
+            decisions = self.controller.take_rank_decisions()
         else:
             state, metrics, _ = self._step_normal(self.state, batch, lr, rng)
+            decisions = []
         self.state = state
+        if decisions:
+            self._migrate_ranks(step, decisions)
         return metrics
+
+    def _migrate_ranks(self, step: int, decisions):
+        """Apply pending rank-shrink decisions from the controller:
+        truncate the live low-rank state (INT8 moments + INT4 projection,
+        deterministic), swap in rank-overridden specs, and rebuild the
+        compiled steps / shardings around the new shapes."""
+        i_flat, i_tree = jax.tree_util.tree_flatten(
+            self.state.opt.inner, is_leaf=qgalore._is_inner_leaf)
+        pr_flat, pr_tree = jax.tree_util.tree_flatten(
+            self.state.opt.proj,
+            is_leaf=lambda x: qgalore.quant.is_qtensor(x) or x is None)
+        for idx, old, new in decisions:
+            spec = self.specs[idx]
+            i_flat[idx], pr_flat[idx] = qgalore.migrate_rank_state(
+                i_flat[idx], pr_flat[idx], spec, new, self.rules)
+            self._rank_overrides[spec.path] = new
+            log.info("rank transition at step %d: %s %d -> %d "
+                     "(explained-variance threshold held %d refreshes)",
+                     step, spec.path, old, new,
+                     self.controller._cfg_for(idx).rank_patience)
+        self.state = step_lib.TrainState(
+            self.state.params,
+            qgalore.QGaLoreState(
+                inner=jax.tree_util.tree_unflatten(i_tree, i_flat),
+                proj=jax.tree_util.tree_unflatten(pr_tree, pr_flat),
+                count=self.state.opt.count))
+        self._build_execution()
+        self.controller.update_specs(self.specs)
+        if self.state_sharding is not None:
+            # ZeRO re-shard: the shrunk arrays re-place under the sharding
+            # derived from the NEW shapes (divisibility re-checked)
+            self.state = jax.device_put(self.state, self.state_sharding)
 
     def run(self, steps: Optional[int] = None, max_failures: int = 3):
         steps = steps if steps is not None else self.tcfg.steps

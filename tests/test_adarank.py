@@ -1,0 +1,154 @@
+"""Adaptive-rank golden harness + adaptive-vs-static ablation.
+
+Companion to ``tests/test_golden.py``: the same fixed-seed 40-step
+llama-60m smoke run, but with dynamic per-layer rank adaptation ON
+(``adaptive_rank=True``) and GaLore extended to the embedding/head leaves
+so the low-rank state dominates the optimizer bytes. The committed fixture
+(``tests/golden/llama60m_adarank_40steps.json``) pins:
+
+* the loss curve (tolerance band, same rtol/atol as the base fixture);
+* the EXACT rank-transition schedule — (step, path, old → new) — the
+  host-side spectrum-driven shrink decisions are integer state, so any
+  change to the explained-variance computation, the controller's
+  streak/patience logic, or the refresh numerics that flips a shrink
+  decision fails loudly even when the losses stay in band;
+* the exact final per-leaf ranks.
+
+Regenerate after an *intentional* numerics change with:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest \
+        tests/test_adarank.py -q
+
+The ablation test pins the paper-motivated payoff: the adaptive run must
+end inside a tight loss band of the static-rank run while strictly
+shrinking both the optimizer-state bytes and the per-step compressed-DP
+gradient payload.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import QGaLoreConfig, ShapeCell, TrainConfig
+from repro.core import qgalore
+from repro.core.optimizers import preset
+from repro.models import model_zoo
+from repro.train.trainer import Trainer
+
+GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          "golden")
+FIXTURE = os.path.join(GOLDEN_DIR, "llama60m_adarank_40steps.json")
+STEPS = 40
+LOSS_RTOL = 2e-3
+LOSS_ATOL = 2e-3
+# ablation acceptance: the adaptive run must land within this band of the
+# static-rank run's final loss while cutting >= MIN_BYTE_REDUCTION of the
+# optimizer-state bytes
+ABLATION_LOSS_ATOL = 5e-3
+MIN_BYTE_REDUCTION = 0.25
+
+
+def build_trainer(adaptive_rank: bool = True) -> Trainer:
+    """The pinned adarank configuration: the base golden config +
+    ``galore_embeddings=True`` (so the embedding/head Adam state is
+    low-rank — full-rank embedding state would dominate the byte count
+    and mask the rank-shrink effect) + the adaptive-rank knobs. Any change
+    here invalidates the fixture — bump the "config" stamp."""
+    bundle = model_zoo.build_arch("llama-60m", smoke=True,
+                                  dtype=jnp.float32)
+    qcfg = preset("qgalore", QGaLoreConfig(
+        rank=8, min_dim=32, update_interval=4, adaptive_k=1,
+        cos_threshold=0.3, galore_embeddings=True,
+        adaptive_rank=adaptive_rank, rank_ladder=(4,),
+        explained_ratio_threshold=0.45, rank_patience=3, min_rank=4))
+    tcfg = TrainConfig(
+        seed=0, global_batch=4, seq_len=32, steps=STEPS,
+        learning_rate=1e-2, warmup_steps=2, grad_clip=1.0, log_every=0,
+        async_checkpoint=False)
+    cell = ShapeCell("golden", 32, 4, "train")
+    return Trainer(bundle, tcfg, qcfg, cell=cell, impl="fused",
+                   param_dtype=jnp.float32)
+
+
+def _run(adaptive_rank: bool) -> dict:
+    tr = build_trainer(adaptive_rank)
+    hist = tr.run()
+    return {
+        "losses": [float(h["loss"]) for h in hist],
+        "transitions": tr.controller.rank_transition_summary(),
+        "final_ranks": {tr.specs[i].path: int(r)
+                        for i, r in sorted(tr.controller.ranks.items())},
+        "opt_bytes": qgalore.optimizer_state_bytes(
+            tr.state.params, tr.rules, specs=tr.specs),
+        "dp_payload_bytes": qgalore.dp_payload_bytes(tr.specs),
+    }
+
+
+# both tests consume the adaptive run; cache it so the 40-step trajectory
+# executes once per pytest session
+_CACHE: dict = {}
+
+
+def _adaptive_run() -> dict:
+    if "adaptive" not in _CACHE:
+        _CACHE["adaptive"] = _run(adaptive_rank=True)
+    return _CACHE["adaptive"]
+
+
+def test_adarank_golden_trajectory():
+    got = dict(_adaptive_run(),
+               config="llama-60m smoke / qgalore r8 adarank ladder(4,) "
+                      "thresh 0.45 patience 3 / seed 0 / 40 steps")
+    if os.environ.get("REPRO_REGEN_GOLDEN") == "1":
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(FIXTURE, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+        pytest.skip(f"regenerated {FIXTURE}")
+    assert os.path.exists(FIXTURE), (
+        "adarank golden fixture missing — run REPRO_REGEN_GOLDEN=1 pytest "
+        "tests/test_adarank.py and commit it")
+    with open(FIXTURE) as f:
+        want = json.load(f)
+    assert got["config"] == want["config"]
+    np.testing.assert_allclose(
+        got["losses"], want["losses"], rtol=LOSS_RTOL, atol=LOSS_ATOL,
+        err_msg="adarank loss trajectory drifted out of the golden band — "
+                "if the numerics change is intentional, regenerate the "
+                "fixture (see module docstring)")
+    assert got["transitions"] == want["transitions"], (
+        "the rank-transition schedule changed — the spectrum-driven shrink "
+        "decisions (explained-variance profiles, streak/patience logic) "
+        "took a different path than the golden run")
+    assert got["final_ranks"] == want["final_ranks"]
+    assert got["opt_bytes"] == want["opt_bytes"]
+    assert got["dp_payload_bytes"] == want["dp_payload_bytes"]
+
+
+def test_adaptive_vs_static_rank():
+    """The ablation the tentpole exists for: dynamic rank adaptation must
+    (a) stay within a tight band of the static-rank run's final loss,
+    (b) strictly shrink the optimizer-state bytes — by at least 25% —
+    (c) strictly shrink the per-step compressed-DP gradient payload."""
+    ada = _adaptive_run()
+    static = _run(adaptive_rank=False)
+
+    assert static["transitions"] == []          # knob truly off
+    assert ada["transitions"], (
+        "no rank transitions fired — the adarank config no longer "
+        "exercises the adaptive path")
+
+    delta = abs(ada["losses"][-1] - static["losses"][-1])
+    assert delta <= ABLATION_LOSS_ATOL, (
+        f"adaptive final loss {ada['losses'][-1]} vs static "
+        f"{static['losses'][-1]}: delta {delta} > {ABLATION_LOSS_ATOL}")
+
+    red = 1.0 - ada["opt_bytes"] / static["opt_bytes"]
+    assert red >= MIN_BYTE_REDUCTION, (
+        f"optimizer-state bytes only shrank {red:.1%} "
+        f"({static['opt_bytes']} -> {ada['opt_bytes']}), "
+        f"need >= {MIN_BYTE_REDUCTION:.0%}")
+
+    assert ada["dp_payload_bytes"] < static["dp_payload_bytes"], (
+        "rank shrink must reduce the per-step DP gradient payload")

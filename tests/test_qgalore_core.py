@@ -279,3 +279,109 @@ class TestAdaptiveController:
         ctrl2.from_json(blob)
         assert ctrl2.total_svd_count() == ctrl.total_svd_count()
         assert ctrl2.interval_summary() == ctrl.interval_summary()
+
+
+class TestAdaptiveRankController:
+    """Host-side dynamic rank adaptation: shrink decisions from
+    explained-variance profiles, strict (de)serialization."""
+
+    CFG = QGaLoreConfig(update_interval=10, rank=16, min_dim=64,
+                        adaptive_rank=True, rank_ladder=(8,),
+                        explained_ratio_threshold=0.5, rank_patience=2,
+                        min_rank=8)
+
+    def _setup(self, cfg):
+        params = _toy_params()
+        specs = qgalore.leaf_specs(params, cfg)
+        return specs, adaptive.SubspaceController(specs, cfg)
+
+    def _observe(self, ctrl, specs, step, ratio_at_target):
+        masks = ctrl.masks_for_step(step)
+        sims, ratios = {}, {}
+        for i in masks:
+            sims[specs[i].path] = np.full((specs[i].nbatch,), 0.1)
+            prof = np.linspace(0.05, ratio_at_target, ctrl.ranks[i])
+            prof[7] = ratio_at_target           # entry read for target 8
+            ratios[specs[i].path] = np.tile(prof, (specs[i].nbatch, 1))
+        ctrl.observe(step, masks, sims, ratios)
+        return masks
+
+    def test_shrink_after_patience_then_floor(self):
+        specs, ctrl = self._setup(self.CFG)
+        self._observe(ctrl, specs, 0, 0.9)
+        assert ctrl.take_rank_decisions() == []        # patience 2
+        self._observe(ctrl, specs, 10, 0.9)
+        decisions = ctrl.take_rank_decisions()
+        galore = [i for i, s in enumerate(specs) if s.galore]
+        assert sorted(i for i, _, _ in decisions) == sorted(galore)
+        assert all(old == 16 and new == 8 for _, old, new in decisions)
+        assert set(ctrl.current_ranks().values()) == {8}
+        assert all(t["step"] == 10 for t in
+                   ctrl.rank_transition_summary())
+        # at the ladder floor no further target exists
+        self._observe(ctrl, specs, 20, 0.99)
+        self._observe(ctrl, specs, 30, 0.99)
+        assert ctrl.take_rank_decisions() == []
+
+    def test_below_threshold_resets_streak(self):
+        specs, ctrl = self._setup(self.CFG)
+        self._observe(ctrl, specs, 0, 0.9)
+        self._observe(ctrl, specs, 10, 0.2)            # resets
+        self._observe(ctrl, specs, 20, 0.9)
+        assert ctrl.take_rank_decisions() == []        # streak is 1 again
+        self._observe(ctrl, specs, 30, 0.9)
+        assert ctrl.take_rank_decisions()
+
+    def test_rank_state_json_roundtrip(self):
+        specs, ctrl = self._setup(self.CFG)
+        self._observe(ctrl, specs, 0, 0.9)
+        self._observe(ctrl, specs, 10, 0.9)
+        ctrl.take_rank_decisions()
+        blob = ctrl.to_json()
+        ctrl2 = adaptive.SubspaceController(specs, self.CFG)
+        ctrl2.from_json(blob)
+        assert ctrl2.ranks == ctrl.ranks
+        assert ctrl2.rank_streaks == ctrl.rank_streaks
+        assert ctrl2.rank_transition_summary() == \
+            ctrl.rank_transition_summary()
+
+    def test_from_json_rejects_mismatched_leaf_set(self):
+        """The silent-miss fix: a blob written under different specs must
+        raise, not silently resume with desynchronized schedules."""
+        specs, ctrl = self._setup(self.CFG)
+        blob = ctrl.to_json()
+        params_small = {"blocks": {"w2": jax.random.normal(
+            jax.random.PRNGKey(0), (128, 256))}}
+        specs2 = qgalore.leaf_specs(params_small, self.CFG)
+        ctrl2 = adaptive.SubspaceController(specs2, self.CFG)
+        with pytest.raises(ValueError, match="does not match"):
+            ctrl2.from_json(blob)
+
+    def test_from_json_rejects_unit_count_mismatch(self):
+        """Same leaf set, different stacked-layer layout: loud failure."""
+        specs, ctrl = self._setup(self.CFG)
+        blob = ctrl.to_json()
+        key = jax.random.PRNGKey(0)
+        params2 = {"blocks": {"w1": jax.random.normal(key, (2, 256, 128)),
+                              "w2": jax.random.normal(key, (128, 256)),
+                              "norm": jnp.ones((128,))},
+                   "embed": jax.random.normal(key, (512, 128))}
+        specs2 = qgalore.leaf_specs(params2, self.CFG)
+        ctrl2 = adaptive.SubspaceController(specs2, self.CFG)
+        with pytest.raises(ValueError, match="serialized units"):
+            ctrl2.from_json(blob)
+
+    def test_from_json_accepts_pre_rank_flat_format(self):
+        """Checkpoints from before rank adaptation serialize the flat
+        {idx: [unit...]} form — they must still restore."""
+        import json as _json
+        specs, ctrl = self._setup(self.CFG)
+        masks = ctrl.masks_for_step(0)
+        sims = {specs[i].path: np.full((specs[i].nbatch,), 0.9)
+                for i in masks}
+        ctrl.observe(0, masks, sims)
+        old_blob = _json.dumps(_json.loads(ctrl.to_json())["units"])
+        ctrl2 = adaptive.SubspaceController(specs, self.CFG)
+        ctrl2.from_json(old_blob)
+        assert ctrl2.interval_summary() == ctrl.interval_summary()
+        assert ctrl2.svd_count_summary() == ctrl.svd_count_summary()

@@ -154,3 +154,90 @@ class TestImplParity:
         l1 = [h["loss"] for h in h1]
         l2 = [h["loss"] for h in h2]
         np.testing.assert_allclose(l1, l2, rtol=5e-3, atol=5e-3)
+
+
+def make_adarank_trainer(tmp_path=None, steps=12, ckpt_every=0,
+                         adaptive_rank=True):
+    """The adarank regression config: base trainer config +
+    ``galore_embeddings`` + the adaptive-rank knobs, tuned so a rank-8 → 4
+    shrink fires at step 8 (refresh observations at steps 0/4/8, patience
+    3) — a 12-step run crosses exactly one transition."""
+    bundle = model_zoo.build_arch("llama-60m", smoke=True, dtype=jnp.float32)
+    qcfg = preset("qgalore", QGaLoreConfig(
+        rank=8, min_dim=32, update_interval=4, adaptive_k=1,
+        cos_threshold=0.3, galore_embeddings=True,
+        adaptive_rank=adaptive_rank, rank_ladder=(4,),
+        explained_ratio_threshold=0.45, rank_patience=3, min_rank=4))
+    tcfg = TrainConfig(
+        seed=0, global_batch=4, seq_len=32, steps=steps,
+        learning_rate=1e-2, warmup_steps=2, grad_clip=1.0,
+        checkpoint_dir=str(tmp_path) if tmp_path else "",
+        checkpoint_every=ckpt_every, log_every=0, async_checkpoint=False)
+    return Trainer(bundle, tcfg, qcfg, cell=CELL, impl="fused",
+                   param_dtype=jnp.float32)
+
+
+class TestRankTransitionResume:
+    def _assert_states_equal(self, tr_a, tr_b):
+        for a, b in zip(jax.tree_util.tree_leaves(jax.device_get(tr_a.state)),
+                        jax.tree_util.tree_leaves(jax.device_get(tr_b.state))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_resume_bit_identical_across_rank_transition(self, tmp_path):
+        """The rank-transition extension of ``test_resume_bit_identical``:
+        (a) a checkpoint saved AFTER a shrink (holding truncated state +
+        the rank-override meta) restores into a freshly-built trainer —
+        which must adopt the overrides BEFORE touching arrays — and the
+        tail is bit-identical; (b) a checkpoint saved BEFORE the shrink
+        replays the transition deterministically on resume (migration is
+        SR-free round-to-nearest, so replay equals the original)."""
+        tr_a = make_adarank_trainer(tmp_path / "a", steps=12, ckpt_every=5)
+        hist_a = tr_a.run()
+        trans_a = tr_a.controller.rank_transition_summary()
+        assert [t["step"] for t in trans_a].count(8) == len(trans_a) > 0, (
+            "config drifted: expected all transitions at step 8", trans_a)
+        by_step = {h["step"]: h["loss"] for h in hist_a}
+
+        # (a) interrupt after the transition: latest ckpt is step 10
+        tr_b = make_adarank_trainer(tmp_path / "b", steps=12, ckpt_every=5)
+        tr_b.run(steps=11)
+        tr_c = make_adarank_trainer(tmp_path / "b", steps=12, ckpt_every=5)
+        meta = tr_c.mgr.read_meta()
+        assert meta["rank_overrides"], (
+            "post-transition checkpoint must persist the override map")
+        assert tr_c.maybe_restore() == 11
+        # overrides adopted before array restore: specs already shrunk
+        shrunk = {s.path: s.rank for s in tr_c.specs if s.galore}
+        assert any(r == 4 for r in shrunk.values()), shrunk
+        hist_c = tr_c.run()
+        for h in hist_c:
+            assert h["loss"] == by_step[h["step"]], h
+        self._assert_states_equal(tr_a, tr_c)
+        assert tr_c.controller.rank_transition_summary() == trans_a
+
+        # (b) interrupt before the transition (run() saves its last step,
+        # 6): resume from step 7 with two streak observations restored,
+        # replay the step-8 shrink, land bit-identical
+        tr_d = make_adarank_trainer(tmp_path / "d", steps=12, ckpt_every=5)
+        tr_d.run(steps=7)
+        assert tr_d.controller.rank_transition_summary() == []
+        tr_e = make_adarank_trainer(tmp_path / "d", steps=12, ckpt_every=5)
+        assert tr_e.maybe_restore() == 7
+        assert not tr_e._rank_overrides        # pre-transition ckpt
+        hist_e = tr_e.run()
+        for h in hist_e:
+            assert h["loss"] == by_step[h["step"]], h
+        self._assert_states_equal(tr_a, tr_e)
+        assert tr_e.controller.rank_transition_summary() == trans_a
+
+    def test_restore_with_adaptive_off_fails_loudly(self, tmp_path):
+        """A shrunk checkpoint restored by a run that cannot adapt
+        (adaptive_rank off everywhere) must fail META-FIRST with an error
+        naming the overridden leaves — not a shape error mid-array-restore."""
+        tr = make_adarank_trainer(tmp_path, steps=10, ckpt_every=9)
+        tr.run()
+        assert tr.controller.current_ranks()
+        tr2 = make_adarank_trainer(tmp_path, steps=10, ckpt_every=9,
+                                   adaptive_rank=False)
+        with pytest.raises(ValueError, match="rank_overrides"):
+            tr2.maybe_restore()
