@@ -32,6 +32,13 @@ max-per-device optimizer bytes — the memory axis of the same subsystem
 (its gathers/scatters are GSPMD-inserted at the point of use and show up
 in its wire column; they are state traffic, not gradient sync).
 
+A ``tp`` section re-times the compressed step on a 2-D ``(D/tp, tp)``
+data x model mesh vs the pure-DP ``(D, 1)`` mesh (ZeRO off, isolating
+the model axis) and reports per-device Adam-moment / INT4-projection
+bytes: per the shard-dim table in ``core/projector.py`` each 2-D galore
+leaf keeps exactly one of {moments, projection} on the model axis, so
+``tp_model_sharded_state_reduction_x`` lands ~tp.
+
     PYTHONPATH=src:. python benchmarks/dist_bench.py --out BENCH_dist.json
     PYTHONPATH=src:. python benchmarks/dist_bench.py --smoke   # CI
 """
@@ -189,6 +196,123 @@ def main():
         print(f"{name:>16}: loss {report['modes'][name]['loss']:.4f}  "
               f"step {report['modes'][name]['step_time_s_median']:.3f}s  "
               f"wire {wire['total'] / 2**20:.1f} MiB")
+
+    # ------------------------------------------------------------------
+    # TP section: the same compressed step on a pure-DP (D,1) mesh vs a
+    # 2-D (D/tp, tp) data x model mesh, ZeRO off so the model axis does
+    # all the state-sharding work (the compressed_zero mode above covers
+    # the DP/ZeRO axis). Per the shard-dim table in core/projector.py
+    # every 2-D galore leaf keeps exactly ONE of {Adam moments, INT4
+    # projection} on the model axis, so that component's per-device peak
+    # drops ~tp-fold; the headline ratio below measures exactly those
+    # components under both placements.
+    # ------------------------------------------------------------------
+    from repro.core import projector, qgalore, quant
+
+    tp = 4 if args.devices % 4 == 0 else 2
+    qcfg_tp = replace(qcfg, compress_dp_grads=True)
+    tp_runs: dict = {}
+    for shape in ((args.devices, 1), (args.devices // tp, tp)):
+        dname = f"{shape[0]}x{shape[1]}"
+        mesh_t = jax.make_mesh(shape, ("data", "model"))
+        raw, specs_t = step_lib.build_train_step(
+            bundle, qcfg_tp, tcfg, impl="fused", param_dtype=jnp.float32,
+            mesh=mesh_t, dp_compress=True)
+        state = step_lib.init_state(bundle, qcfg_tp, jax.random.PRNGKey(0),
+                                    jnp.float32)
+        p_sh = sh.param_sharding(state.params, mesh_t)
+        o_sh = sh.opt_state_sharding(state.params, state.opt, qcfg_tp,
+                                     mesh_t)
+        b_sh = sh.data_sharding(
+            jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), batch),
+            mesh_t)
+        rep = sh.replicated(mesh_t)
+        ss = step_lib.TrainState(p_sh, o_sh)
+        fn = jax.jit(lambda st, b, lr, rng: raw(
+            st, b, lr, rng, refresh_masks=None, refresh=False),
+            in_shardings=(ss, b_sh, rep, rep),
+            out_shardings=(ss, None, None))
+        with mesh_t:
+            st = jax.device_put(state, ss)
+            bt = jax.device_put(batch, b_sh)
+            wire = hlo_collective_bytes(
+                fn.lower(st, bt, 1e-3, jax.random.PRNGKey(1))
+                .compile().as_text())
+            st2, metrics, _ = fn(st, bt, 1e-3, jax.random.PRNGKey(1))
+            jax.block_until_ready(st2)
+            times = []
+            for i in range(args.iters):
+                t0 = time.monotonic()
+                st2, metrics, _ = fn(st2, bt, 1e-3, jax.random.PRNGKey(i))
+                jax.block_until_ready(st2)
+                times.append(time.monotonic() - t0)
+
+        def split(tree):
+            leaves = [l for l in jax.tree_util.tree_leaves(tree)
+                      if hasattr(l, "addressable_shards")]
+            return (sum(l.nbytes for l in leaves),
+                    sum(max(s.data.nbytes for s in l.addressable_shards)
+                        for l in leaves))
+
+        mom_g, mom_d = split(st2.opt.inner)
+        prj_g, prj_d = split(st2.opt.proj)
+        tp_runs[dname] = {
+            "specs": specs_t,
+            "inner_flat": jax.tree_util.tree_flatten(
+                st2.opt.inner, is_leaf=qgalore._is_inner_leaf)[0],
+            "proj_flat": jax.tree_util.tree_flatten(
+                st2.opt.proj,
+                is_leaf=lambda x: quant.is_qtensor(x) or x is None)[0],
+            "summary": {
+                "loss": float(metrics["loss"]),
+                "step_time_s_median": float(np.median(times)),
+                "hlo_collective_bytes": wire,
+                "moment_bytes_global": mom_g,
+                "moment_bytes_max_per_device": mom_d,
+                "projection_bytes_global": prj_g,
+                "projection_bytes_max_per_device": prj_d,
+            },
+        }
+        print(f"{dname:>16}: loss {metrics['loss']:.4f}  "
+              f"step {float(np.median(times)):.3f}s  "
+              f"state/dev {(mom_d + prj_d) / 2**20:.2f} MiB")
+
+    dp_name = f"{args.devices}x1"
+    tp_name = f"{args.devices // tp}x{tp}"
+    # the model-sharded component of every 2-D galore leaf, measured
+    # under BOTH placements (leaf order is mesh-independent)
+    specs_2d = tp_runs[tp_name]["specs"]
+
+    def sharded_component_device_bytes(run):
+        total = 0
+        for i, sp in enumerate(specs_2d):
+            if not sp.galore or sp.shard_dim is None:
+                continue
+            tgt = run["proj_flat"][i] if projector.proj_dim_sharded(
+                sp.side, sp.shard_dim) else run["inner_flat"][i]
+            total += sum(
+                max(s.data.nbytes for s in a.addressable_shards)
+                for a in jax.tree_util.tree_leaves(tgt))
+        return total
+
+    report["tp"] = {
+        "tp_degree": tp,
+        "meshes": {k: v["summary"] for k, v in tp_runs.items()},
+        "model_sharded_component_device_bytes": {
+            k: sharded_component_device_bytes(v)
+            for k, v in tp_runs.items()},
+    }
+    report["tp_model_sharded_state_reduction_x"] = (
+        report["tp"]["model_sharded_component_device_bytes"][dp_name]
+        / max(report["tp"]["model_sharded_component_device_bytes"][tp_name],
+              1))
+    report["tp_galore_state_device_reduction_x"] = (
+        (tp_runs[dp_name]["summary"]["moment_bytes_max_per_device"]
+         + tp_runs[dp_name]["summary"]["projection_bytes_max_per_device"])
+        / max(tp_runs[tp_name]["summary"]["moment_bytes_max_per_device"]
+              + tp_runs[tp_name]["summary"]
+              ["projection_bytes_max_per_device"], 1))
 
     # analytic payloads for both embedding recipes (no step build needed)
     specs_emb = step_lib._specs_for(bundle, qcfg, jnp.float32)

@@ -150,6 +150,12 @@ class QGaLoreConfig:
     explained_ratio_threshold: float = 0.95
     rank_patience: int = 2
     min_rank: int = 8
+    # hysteresis half-band around `explained_ratio_threshold`: ratios inside
+    # [threshold - band, threshold) neither advance nor reset the shrink
+    # streak, so a noisy ratio straddling the threshold cannot oscillate a
+    # leaf between ladder rungs (and, once rank growth lands, cannot
+    # flip-flop shrink/grow). 0.0 = exact pre-hysteresis behavior.
+    rank_hysteresis: float = 0.0
     # subspace method: "svd" (paper-faithful) | "randomized" (TPU-fast)
     subspace_method: str = "svd"
     subspace_iters: int = 2         # power iterations for randomized method

@@ -163,7 +163,15 @@ class SubspaceController:
         unit already explains >= threshold of its gradient energy at the
         next-smaller rank; ``rank_patience`` such refreshes trigger a
         shrink decision (picked up by the trainer via
-        :meth:`take_rank_decisions`)."""
+        :meth:`take_rank_decisions`).
+
+        ``rank_hysteresis`` opens a dead band below the threshold:
+        observations in ``[threshold - band, threshold)`` HOLD the streak
+        instead of resetting it, so a ratio that jitters across the
+        threshold between refreshes cannot oscillate the streak (and, with
+        rank growth, the rank itself) — a shrink still requires
+        ``rank_patience`` observations at/above the full threshold, and
+        only a clear drop below the band resets progress."""
         if ratio_arr is None:
             return
         target = self._next_rank(idx, eff)
@@ -175,6 +183,9 @@ class SubspaceController:
         vals = [v for v in vals if v >= 0]
         if not vals:
             return
+        if min(vals) >= eff.explained_ratio_threshold - eff.rank_hysteresis \
+                and min(vals) < eff.explained_ratio_threshold:
+            return                      # dead band: hold the streak
         if min(vals) >= eff.explained_ratio_threshold:
             self.rank_streaks[idx] += 1
             if self.rank_streaks[idx] >= eff.rank_patience:

@@ -177,6 +177,166 @@ def explained_ratio(G: jax.Array, P: jax.Array, side: str) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel shard helpers
+#
+# A TP-sharded weight splits one of its two matrix dims over the model axis
+# (``shard_dim``: 0 = row m, 1 = col n). Which side of the GaLore state that
+# shard lands on follows from the side convention:
+#
+#   side   shard_dim   P (d, r)             low-rank / moments
+#   right  0 (m)       replicated           sharded on m  (local project)
+#   right  1 (n)       sliced on d = n      replicated    (psum on low)
+#   left   0 (m)       sliced on d = m      replicated    (psum on low)
+#   left   1 (n)       replicated           sharded on n  (local project)
+#
+# ``quantize_projection`` blocks along the r axis only, so slicing P on its
+# d axis commutes BIT-EXACTLY with INT4 quantization — per-shard codes and
+# scales are literal row-slices of the replicated quantization (the property
+# tests/test_property.py pins).
+# ---------------------------------------------------------------------------
+
+def proj_dim_sharded(side: str, shard_dim: Optional[int]) -> bool:
+    """True when a weight shard on matrix dim ``shard_dim`` lands on the
+    projection dim d (rows of P): the projected-away dim is n for "right"
+    and m for "left". False → the shard lands on the low-rank moments'
+    surviving dim and P stays replicated over the model axis."""
+    if shard_dim is None:
+        return False
+    return (side == "right") == (shard_dim == 1)
+
+
+def shard_matrix(G: jax.Array, shard_dim: int, index: int,
+                 world: int) -> jax.Array:
+    """The TP rank-``index`` slice of a (batch..., m, n) weight/gradient."""
+    axis = G.ndim - 2 + shard_dim
+    size = G.shape[axis] // world
+    return jax.lax.slice_in_dim(G, index * size, (index + 1) * size,
+                                axis=axis)
+
+
+def shard_projection(P, side: str, shard_dim: Optional[int], index: int,
+                     world: int):
+    """Rank-``index``'s slice of a projection consistent with the weight's
+    TP shard dim. When the shard lands on the surviving dim
+    (``not proj_dim_sharded``) P is replicated and returned whole;
+    otherwise the d axis (dim -2 of P, codes AND per-block scales) is
+    sliced — bit-exact against the replicated quantization because INT4
+    blocks run along r only."""
+    if not proj_dim_sharded(side, shard_dim):
+        return P
+
+    def slice_d(x):
+        size = x.shape[-2] // world
+        return jax.lax.slice_in_dim(x, index * size, (index + 1) * size,
+                                    axis=x.ndim - 2)
+
+    if isinstance(P, QTensor):
+        return QTensor(slice_d(P.q), slice_d(P.scale),
+                       None if P.zero is None else slice_d(P.zero),
+                       P.bits, P.block, P.orig_last, P.dtype)
+    return slice_d(P)
+
+
+def reassemble_projection(shards, side: str, shard_dim: Optional[int]):
+    """Inverse of :func:`shard_projection`: concatenate per-rank slices back
+    to the replicated P (codes and scales concatenated on d). With a
+    surviving-dim shard every entry is the full P already."""
+    if not proj_dim_sharded(side, shard_dim):
+        return shards[0]
+    cat = lambda xs: jnp.concatenate(xs, axis=xs[0].ndim - 2)
+    if isinstance(shards[0], QTensor):
+        p0 = shards[0]
+        return QTensor(cat([s.q for s in shards]),
+                       cat([s.scale for s in shards]),
+                       None if p0.zero is None
+                       else cat([s.zero for s in shards]),
+                       p0.bits, p0.block, p0.orig_last, p0.dtype)
+    return cat(list(shards))
+
+
+def project_sharded(G, P, side: str, shard_dim: Optional[int], psum):
+    """Low-rank projection from per-rank shards: local einsum plus — only
+    when the shard dim is the CONTRACTED (projected-away) dim — one ``psum``
+    of the low-rank product. ``psum`` is any reducer over the model front
+    (``jax.lax.psum`` bound to the axis inside a shard_map, or ``sum`` over
+    a host-side list in tests). Never touches a full-rank tensor."""
+    low = project(G.astype(jnp.float32), maybe_dequantize(P), side)
+    if proj_dim_sharded(side, shard_dim):
+        return psum(low)
+    return low
+
+
+def explained_ratio_sharded(G, P, side: str, shard_dim: Optional[int],
+                            psum) -> jax.Array:
+    """:func:`explained_ratio` of the FULL gradient computed from per-rank
+    shards. Contracted-dim shard: psum the (low-rank) projection before
+    squaring; surviving-dim shard: per-direction energies are sums of
+    squares over the sharded axis, so the partials psum directly. The
+    total Frobenius mass psums in both cases. Wire payload is (r,)-sized
+    (+ the low-rank product in the contracted case) — no full-rank tensor
+    ever crosses the model front."""
+    Gf = G.astype(jnp.float32)
+    low = project(Gf, maybe_dequantize(P), side)
+    axis = -2 if side == "right" else -1
+    total = psum(jnp.sum(Gf * Gf, axis=(-2, -1)))
+    if proj_dim_sharded(side, shard_dim):
+        energies = jnp.sum(jnp.square(psum(low)), axis=axis)
+    else:
+        energies = psum(jnp.sum(low * low, axis=axis))
+    cum = jnp.cumsum(energies, axis=-1)
+    return cum / jnp.maximum(total, 1e-30)[..., None]
+
+
+def _canonical_signs(W: jax.Array) -> jax.Array:
+    """Deterministic per-column sign: the largest-|entry| coordinate is made
+    positive (ties broken by lowest index via argmax)."""
+    pick = jnp.take_along_axis(
+        W, jnp.argmax(jnp.abs(W), axis=-2, keepdims=True), axis=-2)
+    return W * jnp.where(pick >= 0, 1.0, -1.0)
+
+
+def sharded_subspace(G_shard: jax.Array, rank: int, side: str,
+                     shard_dim: int, psum, eps: float = 1e-12):
+    """Exact top-``rank`` subspace of the full gradient from per-rank
+    shards, without gathering it: accumulate the Gram matrix over the
+    UNSHARDED matrix dim (one psum of a (d, d) block, d = that dim),
+    eigendecompose it (replicated, deterministic — every rank computes the
+    same factors from the same psum'd Gram, so no cross-rank sign
+    divergence), and return this rank's piece of P:
+
+    * surviving-dim shard → the Gram dim IS the projection dim; the
+      (sign-canonicalized) top-``rank`` eigenvectors are the full,
+      replicated P.
+    * contracted-dim shard → the Gram dim is the surviving dim; the local
+      P slice is recovered as ``G_shard^T U_r / sigma_r`` (right) /
+      ``G_shard V_r / sigma_r`` (left) — each rank materializes only its
+      (d_loc, r) slice.
+
+    Eigen-vs-SVD numerics differ at fp32 noise level (compare subspaces via
+    :func:`subspace_similarity`, not elementwise). The production
+    distributed refresh (train/step.py) instead re-scatters stacked leaves
+    over the layer dim and runs the replicated-bit-identical per-layer SVD;
+    this routine is the per-matrix alternative for leaves with no layer dim
+    to scatter."""
+    Gf = G_shard.astype(jnp.float32)
+    sliced = proj_dim_sharded(side, shard_dim)
+    # Gram over the unsharded dim: (d, d) with d the un-sharded matrix dim
+    if (side == "right") == (not sliced):
+        C = psum(jnp.einsum("...mn,...mk->...nk", Gf, Gf))   # G^T G (n, n)
+    else:
+        C = psum(jnp.einsum("...mn,...kn->...mk", Gf, Gf))   # G G^T (m, m)
+    lam, W = jnp.linalg.eigh(C)                 # ascending eigenvalues
+    lam = lam[..., ::-1][..., :rank]
+    W = _canonical_signs(W[..., ::-1][..., :rank])
+    if not sliced:
+        return W                                # full replicated P
+    inv_sigma = jax.lax.rsqrt(jnp.maximum(lam, eps))
+    if side == "right":                          # V_loc = G_loc^T U / sigma
+        return jnp.einsum("...mn,...mr->...nr", Gf, W) * inv_sigma[..., None, :]
+    return jnp.einsum("...mn,...nr->...mr", Gf, W) * inv_sigma[..., None, :]
+
+
+# ---------------------------------------------------------------------------
 # Quantized projection helpers
 # ---------------------------------------------------------------------------
 

@@ -85,10 +85,26 @@ class LeafSpec:
     # effective per-leaf recipe (base config + group overrides); None only
     # for specs built outside leaf_specs (tests constructing LeafSpec raw)
     cfg: Optional[QGaLoreConfig] = None
+    # --- tensor-parallel annotation (distributed.sharding.annotate_tp) ---
+    # Which matrix dim the model axis splits (0 = row m, 1 = col n; None =
+    # unsharded) and over how many ranks. Project/backproject and the
+    # refresh consume shards through these: a surviving-dim shard keeps the
+    # low-rank moments sharded with a replicated P, a projected-dim shard
+    # keeps P sliced on d with replicated moments (see
+    # core.projector.proj_dim_sharded). Defaults describe the DP-only /
+    # single-device contract, so un-annotated specs behave exactly as
+    # before.
+    shard_dim: Optional[int] = None
+    tp: int = 1
 
     @property
     def mat_shape(self) -> Tuple[int, int]:
         return self.shape[-2], self.shape[-1]
+
+    @property
+    def proj_sharded(self) -> bool:
+        """True when the TP shard slices the projection's d axis."""
+        return projector.proj_dim_sharded(self.side, self.shard_dim)
 
     @property
     def nbatch(self) -> int:
@@ -506,7 +522,11 @@ def _group_sig(param, grad, inner, P, spec: LeafSpec, shard=None):
     # spec.cfg (the per-group effective recipe) and lr_scale are part of
     # the signature: same-signature-same-group leaves still scan as one
     # program, while leaves from different param groups never share one.
+    # The TP annotation is part of it too: leaves whose state splits over
+    # the model axis on different dims (or not at all) must never share a
+    # scanned program even when no explicit shardings are passed.
     return (spec.shape, spec.galore, spec.side, spec.rank, spec.batch,
+            spec.shard_dim, spec.tp,
             spec.cfg, spec.lr_scale,
             _leaf_sig(param), _leaf_sig(grad), _leaf_sig(inner),
             _leaf_sig(P), _shard_sig(shard))
@@ -854,7 +874,14 @@ def migrate_rank_state(inner: Adam8bitState, P, spec: LeafSpec,
     AdaRankGrad move). Deterministic (round-to-nearest requantization, no
     SR), so migrate-then-checkpoint equals checkpoint-then-migrate
     bit-for-bit. Returns ``(new_inner, new_P)`` shaped for the
-    ``apply_rank_overrides``'d spec."""
+    ``apply_rank_overrides``'d spec.
+
+    TP shards are respected for free: both truncations slice only the r
+    axis, never the TP-sharded d / surviving axis, so migrating a
+    model-sharded leaf equals the shard-slice of the replicated migration
+    (INT4 blocks run along r — requantization of a d-slice is the d-slice
+    of the requantization). The trainer re-places the shrunk state under
+    the re-derived (2-D mesh + ZeRO) shardings after the rebuild."""
     if not spec.galore:
         raise ValueError(f"cannot migrate non-galore leaf {spec.path}")
     if not 0 < new_rank < spec.rank:

@@ -76,7 +76,7 @@ class _Ctx:
     """Per-update scratch shared by the stages of one chain invocation."""
 
     def __init__(self, params_flat, specs, rules, lr, rng, count,
-                 refresh, refresh_masks):
+                 refresh, refresh_masks, shardings=None):
         self.params_flat = params_flat
         self.specs = specs
         self.rules = rules
@@ -85,6 +85,7 @@ class _Ctx:
         self.count = count
         self.refresh = refresh
         self.refresh_masks = refresh_masks or {}
+        self.shardings = shardings           # {path: NamedSharding} hints
         self.metrics: Dict[str, Any] = {}
         self.proj: Optional[List] = None     # written by project()
 
@@ -95,6 +96,16 @@ class _Ctx:
 
     def lr_for(self, spec: LeafSpec):
         return qgalore._lr_for(spec, self.lr)
+
+    def constrain_low(self, idx: int, val):
+        """Pin a low-rank per-leaf value to its TP/ZeRO moment layout
+        (``distributed.sharding.lowrank_shardings``). No hint for this
+        leaf — or no hints at all — is a no-op, so the single-process
+        chain stays bit-identical."""
+        sh = self.shardings.get(self.specs[idx].path) \
+            if isinstance(self.shardings, dict) else None
+        return val if sh is None \
+            else jax.lax.with_sharding_constraint(val, sh)
 
 
 def _noop_init(params_flat, specs, rules, key):
@@ -197,11 +208,11 @@ def project(cfg_or_rules) -> Stage:
                         ratios
             new_P[idx] = P
             if qgalore._grad_is_lowrank(g, spec):
-                out[idx] = g.astype(jnp.float32)
+                out[idx] = ctx.constrain_low(idx, g.astype(jnp.float32))
             else:
                 P_deq = projector.maybe_dequantize(P, jnp.float32)
-                out[idx] = projector.project(g.astype(jnp.float32), P_deq,
-                                             spec.side)
+                out[idx] = ctx.constrain_low(idx, projector.project(
+                    g.astype(jnp.float32), P_deq, spec.side))
         ctx.proj = new_P
         return out, new_P
 
@@ -235,7 +246,8 @@ def quantized_adam(cfg_or_rules) -> Stage:
             direction, st = adam8bit.update(
                 vals[idx].astype(jnp.float32), inner_flat[idx], ctx.count,
                 _hyper(eff))
-            out[idx] = direction
+            out[idx] = ctx.constrain_low(idx, direction) \
+                if spec.galore else direction
             new_inner[idx] = st
         return out, new_inner
 
@@ -387,7 +399,10 @@ def chain(*stages: Stage, rules=None) -> GradientTransformation:
     def update(grads, state: ChainState, params, *, lr, rng,
                refresh_masks=None, refresh: bool = False, specs=None,
                shardings=None):
-        del shardings    # layout hints only apply to the fused executor
+        # ``shardings``: either the fused executor's TrainState-of-
+        # shardings (ignored here) or a ``{path: NamedSharding}`` dict of
+        # low-rank layout hints (``sharding.lowrank_shardings``) pinned
+        # between stages on a 2-D mesh.
         specs = specs or qgalore.leaf_specs(params, rules)
         params_flat, treedef = jax.tree_util.tree_flatten(
             params, is_leaf=quant.is_qtensor)
@@ -395,7 +410,9 @@ def chain(*stages: Stage, rules=None) -> GradientTransformation:
             grads, is_leaf=quant.is_qtensor)[0]
         count = state.count + 1
         ctx = _Ctx(params_flat, specs, rules, lr, rng, count, refresh,
-                   refresh_masks)
+                   refresh_masks,
+                   shardings=shardings
+                   if isinstance(shardings, dict) else None)
         new_states = []
         for s, st in zip(stages, state.stages):
             vals, st = s.apply(ctx, vals, st)

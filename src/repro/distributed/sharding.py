@@ -56,11 +56,15 @@ _MATMUL_RULES = [
 ]
 
 
-def norm_path(path) -> str:
-    """jax key-path → '/a/b/c' string."""
-    s = jax.tree_util.keystr(path)
+def _norm_path_str(s: str) -> str:
+    """keystr-format path string → '/a/b/c'."""
     return "/" + re.sub(r"\['([^']*)'\]", r"\1/", s).rstrip("/") \
         .replace("][", "/").replace("[", "").replace("]", "")
+
+
+def norm_path(path) -> str:
+    """jax key-path → '/a/b/c' string."""
+    return _norm_path_str(jax.tree_util.keystr(path))
 
 
 def logical_axes(path: str, ndim: int) -> Tuple[Optional[str], ...]:
@@ -201,6 +205,48 @@ def param_sharding(params, mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# Tensor-parallel leaf-spec annotation
+# ---------------------------------------------------------------------------
+
+def annotate_tp(specs: List[LeafSpec], mesh: Optional[Mesh]
+                ) -> List[LeafSpec]:
+    """Stamp each spec with its TP shard annotation (``shard_dim``/``tp``)
+    derived from the SAME matmul rules + divisibility / EP-precedence
+    checks that place the parameters (:func:`spec_for`) — so the
+    annotation can never disagree with the actual weight layout. No-op
+    (annotations keep their replicated defaults) without a mesh or with a
+    size-1 model axis, keeping DP-only and single-device specs
+    bit-identical to the pre-TP contract."""
+    if mesh is None or "model" not in mesh.axis_names \
+            or mesh.shape["model"] <= 1:
+        return specs
+    import dataclasses
+    tp = int(mesh.shape["model"])
+    out = []
+    for spec in specs:
+        if len(spec.shape) < 2:
+            out.append(spec)
+            continue
+        pstr = _norm_path_str(spec.path)
+        parts = spec_for(spec.shape, logical_axes(pstr, len(spec.shape)),
+                         mesh)
+        shard_dim = None
+        for d in (0, 1):
+            part = parts[len(spec.shape) - 2 + d] \
+                if len(parts) >= len(spec.shape) - 1 + d else None
+            names = (part,) if isinstance(part, str) else tuple(part or ())
+            if "model" in names:
+                shard_dim = d
+                break
+        if shard_dim is None:
+            out.append(spec)
+        else:
+            out.append(dataclasses.replace(spec, shard_dim=shard_dim,
+                                           tp=tp))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Optimizer-state sharding
 # ---------------------------------------------------------------------------
 
@@ -280,6 +326,31 @@ def opt_state_sharding(params, opt_state, cfg, mesh: Mesh,
         proj=jax.tree_util.tree_unflatten(treedef, proj_out),
         count=NamedSharding(mesh, P()),
     )
+
+
+def lowrank_shardings(specs: List[LeafSpec], mesh: Mesh,
+                      zero_axes: Tuple[str, ...] = ()):
+    """Per-leaf layout hints for LOW-RANK values (projected gradients /
+    Adam directions), keyed by ``LeafSpec.path``.
+
+    Each galore leaf gets its MOMENT layout — the surviving weight dim
+    model-sharded exactly when the TP placement shards that dim of the
+    weight, the rank dim never sharded, optionally ZeRO-extended over
+    ``zero_axes``. The transform chain applies these between its stages
+    (``shardings=`` on ``chain(...).update``) so a 2-D mesh keeps the
+    low-rank flow on the TP layout instead of re-replicating it at every
+    stage boundary."""
+    out = {}
+    for spec in specs:
+        if not spec.galore:
+            continue
+        logical = logical_axes(_norm_path_str(spec.path), len(spec.shape))
+        mom_log, _ = _galore_state_logicals(spec, logical)
+        pspec = _extend_with_zero(
+            spec_for(spec.low_shape, mom_log, mesh), spec.low_shape, mesh,
+            zero_axes)
+        out[spec.path] = NamedSharding(mesh, pspec)
+    return out
 
 
 def zero2_scatter_dims(opt_sharding, specs: List[LeafSpec],

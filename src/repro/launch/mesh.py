@@ -33,8 +33,25 @@ def make_mesh(shape, axes):
 
 def make_dp_mesh(num_devices: int = 0):
     """Pure data-parallel mesh ``(D, 1)`` over ``("data", "model")`` — the
-    shape the compressed-DP + ZeRO training mode runs on when the model fits
-    one device (the Q-GaLore regime: INT8 weights + low-rank INT8 state)."""
+    shape the compressed-DP + ZeRO training mode runs on when the model
+    fits one device (the Q-GaLore regime: INT8 weights + low-rank INT8
+    state). ``num_devices`` defaults to every visible device. The model
+    axis exists but has size 1, so nothing is tensor-parallel — use
+    :func:`make_tp_mesh` to split devices between the two axes."""
     import jax
     d = num_devices or len(jax.devices())
     return jax.make_mesh((d, 1), ("data", "model"))
+
+
+def make_tp_mesh(tp: int, num_devices: int = 0):
+    """2-D ``(D/tp, tp)`` mesh over ``("data", "model")``: ``tp``-way
+    tensor parallelism, data parallelism over the rest. Validates that
+    ``tp`` divides the device count — a ragged split would silently drop
+    devices."""
+    import jax
+    n = num_devices or len(jax.devices())
+    if tp <= 0 or n % tp != 0:
+        raise ValueError(
+            f"tensor-parallel degree {tp} must be a positive divisor of "
+            f"the device count {n} (got remainder {n % tp if tp else n})")
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

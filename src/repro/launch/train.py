@@ -51,6 +51,10 @@ def main():
                          "follows --zero")
     ap.add_argument("--mesh", default="",
                     help="dxm, e.g. 4x2 (data x model); empty = single dev")
+    ap.add_argument("--tp", type=int, default=0,
+                    help="tensor-parallel degree: builds a (devices/tp, "
+                         "tp) (data x model) mesh. Mutually exclusive "
+                         "with --mesh; must divide the device count")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (CPU emulation)")
     ap.add_argument("--checkpoint-dir", default="")
@@ -74,9 +78,19 @@ def main():
 
     logging.basicConfig(level=logging.INFO)
     mesh = None
+    if args.mesh and args.tp:
+        raise SystemExit("--mesh and --tp both fix the mesh shape — "
+                         "pass one or the other")
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
+        if d * m != len(jax.devices()):
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {d * m} devices, have "
+                f"{len(jax.devices())} (use --devices on CPU)")
         mesh = jax.make_mesh((d, m), ("data", "model"))
+    elif args.tp:
+        from repro.launch.mesh import make_tp_mesh
+        mesh = make_tp_mesh(args.tp)
 
     bundle = model_zoo.build_arch(args.arch, smoke=args.smoke,
                                   dtype=jnp.float32 if args.smoke

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import functools
 import math
+import os
 from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
@@ -57,11 +58,34 @@ def _attend_dense(q, k, v, *, causal: bool, q_offset, softcap: float = 0.0):
     return o.reshape(B, Sq, H, dv)
 
 
+def _flash_eligible(q, k, causal, q_offset, softcap) -> bool:
+    """The dispatch-routed flash kernel covers the self-attention core
+    only: causal, no soft-cap, queries aligned with keys (full sequence,
+    no offset). Decode, cross-attention and ragged prefill keep the
+    chunked path."""
+    return (os.environ.get("REPRO_FLASH_ATTENTION", "") == "1"
+            and causal and not softcap and q_offset == 0
+            and q.shape[1] == k.shape[1] and q.shape[1] > 1
+            and q.shape[2] % k.shape[2] == 0)
+
+
 def chunked_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
                       q_offset: int = 0, softcap: float = 0.0) -> jax.Array:
     """Memory-bounded attention: scan over query chunks (scores stay
-    (chunk, Skv)); falls back to a single dense block for short sequences."""
+    (chunk, Skv)); falls back to a single dense block for short sequences.
+
+    With ``REPRO_FLASH_ATTENTION=1`` eligible calls route through the
+    kernel registry instead (``kernels.ops.flash_attention`` — Pallas
+    flash kernel or its ref oracle per ``REPRO_KERNEL_BACKEND``), with kv
+    heads repeated to fold GQA. Default OFF: the chunked path is the
+    numerics the golden-trajectory fixtures pin."""
     B, Sq, H, dh = q.shape
+    if _flash_eligible(q, k, causal, q_offset, softcap):
+        from repro.kernels import ops
+        G = H // k.shape[2]
+        kf = jnp.repeat(k, G, axis=2) if G > 1 else k
+        vf = jnp.repeat(v, G, axis=2) if G > 1 else v
+        return ops.flash_attention(q, kf, vf, causal=True).astype(q.dtype)
     if Sq <= q_chunk:
         return _attend_dense(q, k, v, causal=causal, q_offset=q_offset,
                              softcap=softcap).astype(q.dtype)

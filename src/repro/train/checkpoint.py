@@ -139,7 +139,14 @@ class CheckpointManager:
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, state, extra_meta: Optional[Dict] = None):
-        """Snapshot now; serialize (possibly) in the background."""
+        """Snapshot now; serialize (possibly) in the background.
+
+        ``_flatten_arrays`` host-gathers every array, so the on-disk
+        format is layout-free: restore may place the state onto ANY mesh
+        — different DP world, different ZeRO axes, or a different TP
+        degree (an ``(8,1)`` <-> ``(2,4)`` reshard is bit-exact; pinned
+        by ``tests/test_tp.py``). The Trainer records the saving mesh in
+        the meta for provenance only."""
         self.wait()
         arrays = _flatten_arrays(state)           # host copy, synchronous
         meta = {"step": step, **(extra_meta or {})}

@@ -84,7 +84,13 @@ def project_leaf(g, P, side: Optional[str] = None):
     rank-r subspace of ``P`` (QTensor or array; leading batch dims ride the
     einsum). Shared by the backward-scan low-rank emission here and the
     distributed refresh in ``train.step`` (which projects the freshly
-    reduced gradient slices with the just-recomputed P)."""
+    reduced gradient slices with the just-recomputed P).
+
+    ``side`` defaults to ``galore_side(g.shape)``, which is only valid on
+    GLOBAL (logical) shapes — inside a manual region over the model axis
+    a TP shard's local shape can flip the m>=n test, so shard-level
+    callers must pass the spec's side explicitly (the distributed refresh
+    does; ``projector.project_sharded`` is the shard-aware variant)."""
     if P is None:
         return g
     Pd = projector.maybe_dequantize(P, jnp.float32)

@@ -165,6 +165,12 @@ def build_train_step(bundle: ModelBundle, qcfg,
     base = rules.base
     if specs is None:
         specs = _specs_for(bundle, rules, param_dtype)
+        if mesh is not None:
+            # shard-dim-aware contract: direct callers get the same
+            # (shard_dim, tp) annotations the trainer derives, so the
+            # batching signatures never mix differently-TP-sharded leaves
+            from repro.distributed import sharding as _sh
+            specs = _sh.annotate_tp(specs, mesh)
     tx = transform.qgalore_transform(rules, specs=specs)
     any_galore = any(s.galore for s in specs)
     seg_keys = {bundle.seg_key(i) for i in range(len(bundle.segments))}
@@ -216,11 +222,23 @@ def build_train_step(bundle: ModelBundle, qcfg,
 
     dp_axes: tuple = ()
     dp_size = 1
+    refresh_axes: tuple = ()
+    refresh_world = 1
     if dp_compress and mesh is not None:
         from jax.sharding import PartitionSpec as P
         dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         dp_size = int(np.prod([mesh.shape[a] for a in dp_axes])) \
             if dp_axes else 1
+        # 2-D (data x model) mesh: the distributed refresh scatters the
+        # layer stack over the COMBINED front — D*t ranks each own
+        # L/(D*t) layers, so per-device refresh memory shrinks by the
+        # model degree too and the per-layer SVD stays the bit-exact
+        # replicated computation (no Gram/eigh numerics drift).
+        refresh_axes, refresh_world = dp_axes, dp_size
+        if dp_axes and "model" in mesh.axis_names \
+                and int(mesh.shape["model"]) > 1:
+            refresh_axes = dp_axes + ("model",)
+            refresh_world = dp_size * int(mesh.shape["model"])
 
     # BF16 grad reduction (paper §3.1 keeps gradients BF16) halves the
     # residual full-rank payloads on the wire. It is OFF by default because
@@ -267,6 +285,18 @@ def build_train_step(bundle: ModelBundle, qcfg,
             if (sp.galore and sp.batch and sp.batch[0] % dp_size == 0
                     and not _is_expert(sp.path)):
                 dist_refresh_ok.add(i)
+
+    # Per-leaf refresh front: on a 2-D (data x model) mesh, leaves whose
+    # layer stack also divides D*t scatter over the COMBINED front (each
+    # of the D*t ranks owns L/(D*t) layers); everything else keeps the
+    # DP-only front. The per-layer SVD is the same bit-exact computation
+    # either way — only the ownership map changes.
+    dist_front = {
+        i: ((refresh_axes, refresh_world)
+            if refresh_world > dp_size
+            and specs[i].batch[0] % refresh_world == 0
+            else (dp_axes, dp_size))
+        for i in dist_refresh_ok}
 
     # ZeRO-2 gradient reduce-scatter only applies where the steady-state
     # gradient is LOW-RANK (fused backward) and the leaf's moments are
@@ -401,13 +431,31 @@ def build_train_step(bundle: ModelBundle, qcfg,
         # enters (layer-sharded reduced grads, P, masks); params and batch
         # stay out, so the model axes simply see replicated copies.
         g_flat2, g_treedef2 = jax.tree_util.tree_flatten(grads)
-        gd = {str(i): g_flat2[i] for i in dist_now}
+        gd = {}
+        for i in dist_now:
+            g = g_flat2[i]
+            front, world = dist_front[i]
+            if world > dp_size:
+                # re-tile the layer-sharded reduced gradient over the
+                # combined (data x model) front BEFORE the fully-manual
+                # region: each of the D*t ranks owns L/(D*t) layers, so no
+                # rank re-materializes even the DP-front shard, let alone
+                # a full-rank replica.
+                g = jax.lax.with_sharding_constraint(
+                    g, jax.sharding.NamedSharding(
+                        mesh, P(front, *([None] * (g.ndim - 1)))))
+            gd[str(i)] = g
 
-        def refresh_inner(gd, pd, md, key, sid):
+        def refresh_inner(gd, pd, md, key, sid, sid_all):
             new_low, new_proj, sims, ratios = {}, {}, {}, {}
             for i in dist_now:
                 sp = specs[i]
-                b_loc = sp.nbatch // dp_size
+                front, world = dist_front[i]
+                # sid enters sharded over its front: the local element IS
+                # this shard's flat index (lax.axis_index lowers to
+                # PartitionId, which XLA:CPU rejects — see repro.compat).
+                sidx = sid_all[0] if world > dp_size else sid[0]
+                b_loc = sp.nbatch // world
                 m, n = sp.mat_shape
                 g_loc = gd[str(i)].reshape(b_loc, m, n)
                 nlead = len(sp.batch)
@@ -415,18 +463,15 @@ def build_train_step(bundle: ModelBundle, qcfg,
                     lambda x: x.reshape((b_loc,) + x.shape[nlead:]),
                     pd[str(i)])
                 mask_flat = md[str(i)].reshape(b_loc)
-                # sid enters sharded over the DP axes: the local element
-                # IS this shard's flat index (lax.axis_index lowers to
-                # PartitionId, which XLA:CPU rejects — see repro.compat).
-                idx = jnp.arange(b_loc, dtype=jnp.int32) + sid[0] * b_loc
+                idx = jnp.arange(b_loc, dtype=jnp.int32) + sidx * b_loc
                 P_new_flat, sim_loc, ratio_loc = qgalore.refresh_slice(
                     g_loc, P_flat, mask_flat, idx,
                     qgalore._eff_cfg(sp, rules), sp.rank,
                     sp.side, jax.random.fold_in(key, i))
                 low_loc = stack.project_leaf(g_loc, P_new_flat, sp.side)
                 gather = functools.partial(
-                    compat.all_gather_tiled, axes=dp_axes, axis=0,
-                    world=dp_size, index=sid[0])
+                    compat.all_gather_tiled, axes=front, axis=0,
+                    world=world, index=sidx)
                 new_low[str(i)] = gather(low_loc).reshape(sp.low_shape)
                 new_proj[str(i)] = jax.tree_util.tree_map(
                     lambda x: gather(x).reshape(sp.batch + x.shape[1:]),
@@ -436,22 +481,27 @@ def build_train_step(bundle: ModelBundle, qcfg,
                     ratios[sp.path] = gather(ratio_loc)
             return new_low, new_proj, sims, ratios
 
-        shard0 = lambda t: jax.tree_util.tree_map(
-            lambda x: P(dp_axes, *([None] * (x.ndim - 1))), t)
+        front0 = lambda t: {
+            k: jax.tree_util.tree_map(
+                lambda x: P(dist_front[int(k)][0],
+                            *([None] * (x.ndim - 1))), v)
+            for k, v in t.items()}
         repl = lambda t: jax.tree_util.tree_map(lambda _: P(), t)
         sims_out_specs = {specs[i].path: P() for i in dist_now}
         ratios_out_specs = {
             specs[i].path: P() for i in dist_now
             if qgalore._eff_cfg(specs[i], rules).adaptive_rank}
         shard_ids = jnp.arange(dp_size, dtype=jnp.int32)
+        shard_ids_all = jnp.arange(refresh_world, dtype=jnp.int32)
         new_low, new_proj, sims, ratios = shard_map(
             refresh_inner, mesh=mesh, axis_names=None,
-            in_specs=(shard0(gd), shard0(refresh_proj),
-                      shard0(refresh_masks), P(), P(dp_axes)),
+            in_specs=(front0(gd), front0(refresh_proj),
+                      front0(refresh_masks), P(), P(dp_axes),
+                      P(refresh_axes)),
             out_specs=(repl(gd), repl(refresh_proj), sims_out_specs,
                        ratios_out_specs),
             check_vma=False)(gd, refresh_proj, refresh_masks, rng,
-                             shard_ids)
+                             shard_ids, shard_ids_all)
         for i in dist_now:
             g_flat2[i] = new_low[str(i)]
         grads = jax.tree_util.tree_unflatten(g_treedef2, g_flat2)
@@ -521,4 +571,11 @@ def build_train_step(bundle: ModelBundle, qcfg,
                    "lr": jnp.asarray(lr, jnp.float32)}
         return TrainState(new_params, new_opt), metrics, opt_metrics
 
+    # introspection for tests / benchmarks: which front each dist-refresh
+    # leaf scatters over, and the mesh-wide refresh geometry
+    step.dist_front = dict(dist_front)
+    step.refresh_axes = refresh_axes
+    step.refresh_world = refresh_world
+    step.dp_axes = dp_axes
+    step.dp_size = dp_size
     return step, specs

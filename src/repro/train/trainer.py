@@ -142,6 +142,13 @@ class Trainer:
         self.specs = qgalore.apply_rank_overrides(self._base_specs,
                                                   self._rank_overrides)
         mesh, tcfg = self.mesh, self.tcfg
+        if mesh is not None:
+            # shard-dim annotation BEFORE anything consumes the specs: the
+            # batching signatures, the optimizer-state placement and the
+            # TP-aware refresh fronts must all see the same (shard_dim, tp)
+            # a leaf's weight actually gets from the placement rules.
+            from repro.distributed import sharding as _sh
+            self.specs = _sh.annotate_tp(self.specs, mesh)
         self.state_sharding = None
         self._batch_sharding = None
         zero2_dims = None
@@ -252,7 +259,12 @@ class Trainer:
                       {"controller": self.controller.to_json(),
                        "rules_fingerprint": self.rules.fingerprint(),
                        "groups": group_assignment(self._base_specs),
-                       "rank_overrides": self.controller.current_ranks()})
+                       "rank_overrides": self.controller.current_ranks(),
+                       # provenance only — restore is mesh-elastic and
+                       # never requires the saving layout (checkpoint.py)
+                       "mesh": None if self.mesh is None else
+                       {a: int(self.mesh.shape[a])
+                        for a in self.mesh.axis_names}})
 
     # ------------------------------------------------------------------
     def _run_one(self, step: int):

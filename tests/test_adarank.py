@@ -152,3 +152,68 @@ def test_adaptive_vs_static_rank():
 
     assert ada["dp_payload_bytes"] < static["dp_payload_bytes"], (
         "rank shrink must reduce the per-step DP gradient payload")
+
+
+# ---------------------------------------------------------------------------
+# rank_hysteresis: the dead band below the shrink threshold
+# ---------------------------------------------------------------------------
+
+def _mini_controller(band: float):
+    """One-leaf controller (64x64 galore leaf, rank 8, ladder (4,),
+    threshold 0.5, patience 2) driven directly through observe()."""
+    from repro.core import adaptive
+    from repro.core.rules import as_rules
+    qcfg = QGaLoreConfig(rank=8, min_dim=32, adaptive_rank=True,
+                         rank_ladder=(4,), explained_ratio_threshold=0.5,
+                         rank_hysteresis=band, rank_patience=2, min_rank=4)
+    params = {"w": jnp.zeros((64, 64), jnp.float32)}
+    specs = qgalore.leaf_specs(params, as_rules(qcfg))
+    idx = next(i for i, s in enumerate(specs) if s.galore)
+    return (adaptive.SubspaceController(specs, qcfg), idx,
+            specs[idx].path)
+
+
+def _feed(ctrl, idx, path, vals):
+    """One observe() per value: the leaf's explained ratio at the target
+    rung (rank 4) for each refresh."""
+    for step, v in enumerate(vals):
+        prof = np.full((1, 8), v, dtype=np.float32)
+        ctrl.observe(step, {idx: np.array([True])},
+                     {path: np.array([0.9])}, {path: prof})
+
+
+def test_rank_hysteresis_dead_band_prevents_oscillation():
+    """A ratio jittering across the threshold (0.51 / 0.45 / 0.51 around
+    threshold 0.5): WITHOUT hysteresis every dip resets the streak, so
+    patience 2 is never reached and the schedule oscillates between
+    almost-shrinking and starting over. With band 0.1 the dip lands in the
+    dead band [0.4, 0.5), the streak HOLDS, and the shrink fires exactly
+    once — no repeated reset/refire."""
+    jitter = [0.51, 0.45, 0.51]
+
+    ctrl, idx, path = _mini_controller(band=0.0)
+    _feed(ctrl, idx, path, jitter)
+    assert ctrl.rank_transition_summary() == []
+    assert ctrl.ranks[idx] == 8
+
+    ctrl, idx, path = _mini_controller(band=0.1)
+    _feed(ctrl, idx, path, jitter)
+    trans = ctrl.rank_transition_summary()
+    assert [(t["old"], t["new"]) for t in trans] == [(8, 4)]
+    assert ctrl.ranks[idx] == 4
+    assert ctrl.take_rank_decisions() == [(idx, 8, 4)]
+    # at the ladder floor: further observations can't fire again
+    _feed(ctrl, idx, path, [0.9, 0.9, 0.9])
+    assert len(ctrl.rank_transition_summary()) == 1
+
+
+def test_rank_hysteresis_clear_drop_still_resets():
+    """The band only absorbs jitter: a ratio clearly below
+    threshold - band resets the streak even with hysteresis on, and the
+    shrink then needs a fresh patience run (with in-band dips holding)."""
+    ctrl, idx, path = _mini_controller(band=0.1)
+    _feed(ctrl, idx, path, [0.51, 0.30, 0.51])
+    assert ctrl.rank_transition_summary() == []       # 0.30 reset progress
+    _feed(ctrl, idx, path, [0.45, 0.51])
+    trans = ctrl.rank_transition_summary()            # hold, then 2nd hit
+    assert [(t["old"], t["new"]) for t in trans] == [(8, 4)]

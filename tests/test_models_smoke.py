@@ -93,3 +93,50 @@ def test_full_config_param_counts():
         cfg = model_zoo.get_config(arch)
         n = model_zoo.count_params_analytic(cfg)
         assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]"
+
+
+# ---------------------------------------------------------------------------
+# Flash-attention routing (REPRO_FLASH_ATTENTION=1)
+# ---------------------------------------------------------------------------
+
+def test_flash_attention_route_matches_chunked(monkeypatch):
+    """attention.chunked_attention routed through the dispatch-registered
+    flash kernel (GQA folded via head repetition) must match the default
+    chunked path; ineligible calls (soft-cap, decode offset, non-causal)
+    must stay on the chunked path bit-identically with the flag on."""
+    from repro.models import attention
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, KH, dh = 2, 64, 8, 2, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, S, H, dh), jnp.float32)
+    k = jax.random.normal(kk, (B, S, KH, dh), jnp.float32)
+    v = jax.random.normal(kv, (B, S, KH, dh), jnp.float32)
+
+    monkeypatch.delenv("REPRO_FLASH_ATTENTION", raising=False)
+    want = attention.chunked_attention(q, k, v, causal=True)
+
+    monkeypatch.setenv("REPRO_FLASH_ATTENTION", "1")
+    assert attention._flash_eligible(q, k, True, 0, 0.0)
+    got = attention.chunked_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    # MHA (no GQA fold) also routes
+    kf = jnp.repeat(k, H // KH, axis=2)
+    vf = jnp.repeat(v, H // KH, axis=2)
+    got_mha = attention.chunked_attention(q, kf, vf, causal=True)
+    np.testing.assert_allclose(np.asarray(got_mha), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+    # ineligible shapes keep the chunked numerics EXACTLY (flag still on)
+    for kwargs in ({"causal": False}, {"softcap": 30.0},
+                   {"q_offset": 16}):
+        assert not attention._flash_eligible(
+            q, k, kwargs.get("causal", True), kwargs.get("q_offset", 0),
+            kwargs.get("softcap", 0.0))
+        on = attention.chunked_attention(q, k, v, **kwargs)
+        monkeypatch.delenv("REPRO_FLASH_ATTENTION")
+        off = attention.chunked_attention(q, k, v, **kwargs)
+        monkeypatch.setenv("REPRO_FLASH_ATTENTION", "1")
+        np.testing.assert_array_equal(np.asarray(on), np.asarray(off))
