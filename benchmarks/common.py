@@ -69,3 +69,49 @@ def run_method(method: str, steps: int, *, qcfg: Optional[QGaLoreConfig] =
 
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# -- interleaved paired-rounds measurement -----------------------------------
+#
+# Sequential A/B timing (all iters of A, then all of B) is vulnerable to
+# scheduler drift between the two windows — it is what produced the
+# phantom "quantized prefill regression" once reported on this box.
+# Paired rounds time one short burst of EVERY variant back-to-back per
+# round (order reversed on alternate rounds), and ratios are computed
+# per-round then trimmed, so a hiccup lands in one round and gets
+# dropped instead of skewing one variant's whole budget.
+
+def paired_times(variants, *, rounds: int = 12, inner: int = 4
+                 ) -> Dict[str, List[float]]:
+    """Per-round us/call for each zero-arg variant in ``variants``
+    (a name -> callable dict), measured interleaved."""
+    for f in variants.values():                 # compile + warm all first
+        jax.block_until_ready(f())
+    names = list(variants)
+    times: Dict[str, List[float]] = {n: [] for n in names}
+    for r in range(rounds):
+        order = names if r % 2 == 0 else list(reversed(names))
+        for n in order:
+            f = variants[n]
+            t0 = time.perf_counter()
+            for _ in range(inner):
+                out = f()
+            jax.block_until_ready(out)
+            times[n].append((time.perf_counter() - t0) / inner * 1e6)
+    return times
+
+
+def paired_ratio(times: Dict[str, List[float]], base: str, test: str,
+                 trim: float = 0.2) -> Dict[str, float]:
+    """Trimmed-mean speedup of ``test`` over ``base`` from paired round
+    times (ratio_x > 1 ⇔ test is faster): per-round ratios, sorted, with
+    the top/bottom ``trim`` fraction dropped; ``sem`` is the standard
+    error of the surviving rounds."""
+    r = np.asarray(times[base], float) / np.asarray(times[test], float)
+    r = np.sort(r)
+    k = int(len(r) * trim)
+    core = r[k: len(r) - k] if len(r) > 2 * k else r
+    sem = float(core.std(ddof=1) / np.sqrt(len(core))) if len(core) > 1 \
+        else 0.0
+    return {"ratio_x": float(core.mean()), "median_x": float(np.median(r)),
+            "sem": sem, "rounds": int(len(r))}

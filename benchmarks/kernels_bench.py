@@ -1,33 +1,44 @@
 """Kernel microbenchmarks (CPU wall time of the jnp reference paths +
 interpret-mode Pallas correctness cost; real-TPU numbers come from the
-roofline, not this box) and serving throughput.
+roofline, not this box) and the quantized-vs-dequant A/B gate.
+
+Measurement discipline
+----------------------
+Sequential A/B timing (run all iters of A, then all of B) is what
+produced the phantom "quantized prefill regression" this box once
+reported: scheduler drift between the two windows shows up as a fake
+ratio. Every ratio here is measured with **interleaved paired rounds**
+instead — each round times one short burst of every variant
+back-to-back (alternating order round to round), the per-round ratios
+are trimmed (drop the top/bottom 20%), and the trimmed mean ± standard
+error is reported. A real effect survives trimming; a scheduler hiccup
+lands in one round and gets dropped.
+
+The ``--gate-out`` mode writes a machine-readable no-regression verdict
+for CI: quantized_dense forward must not be slower than the
+dequantize-then-einsum baseline. On the ``ref`` backend the two compile
+to near-identical XLA programs, so the gate passes when the trimmed
+ratio is ≥ 1.0 **or** is within 2 standard errors of 1.0 (a hard ≥ 1.0
+on a noisy shared box would flake on a true ratio of exactly 1.0).
 
 The fused-update section times the Q-GaLore per-step weight update both
-ways:
-
-* unfused-interpret — the three-op hot path as three separate Pallas
-  calls in interpret mode (INT4 projection matmul, jnp Adam, SR requant),
-  which is what the per-leaf loop used to run on CPU containers;
-* unfused-same-backend — the same three-op composition on the
-  dispatch-selected default backend (isolates the fusion benefit from
-  the interpreter overhead);
-* fused   — ``ops.fused_qgalore_update`` on the dispatch-selected default
-  backend (pure-XLA ``ref`` off-TPU, ``pallas-tpu`` on TPU),
-
-and emits both speedup ratios.
+ways (unfused-interpret / unfused-same-backend / fused) and emits both
+speedup ratios.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, paired_ratio, paired_times
 from repro.core import projector, quant
 from repro.core.quant import quantize_blockwise
-from repro.kernels import dispatch, ops, ref
+from repro.kernels import dispatch, ops, profile
 
 
 def _time(fn, *args, iters=5):
@@ -39,7 +50,14 @@ def _time(fn, *args, iters=5):
     return (time.monotonic() - t0) / iters * 1e6
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=12)
+    ap.add_argument("--inner", type=int, default=4)
+    ap.add_argument("--gate-out", default=None,
+                    help="write the quantized>=dequant gate verdict JSON")
+    args = ap.parse_args(argv)
+
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (512, 1024), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 1), (1024, 2048))
@@ -72,29 +90,67 @@ def main():
     emit("kernels/int8_pallas_interpret", (time.monotonic() - t0) * 1e6,
          "M=128;K=256;N=512;mode=interpret")
 
-    quantized_dense_bench(key)
+    gate = quantized_dense_bench(key, rounds=args.rounds, inner=args.inner)
     fused_update_bench(key)
 
+    if args.gate_out:
+        with open(args.gate_out, "w") as f:
+            json.dump(gate, f, indent=2)
+        print(f"wrote {args.gate_out} (pass={gate['pass']})", flush=True)
+    return gate
 
-def quantized_dense_bench(key, m=512, k=1024, n=2048, iters=5):
-    """quantized_dense fwd + fwd/bwd vs the dequantize-then-einsum baseline
-    on the dispatch default backend (the model hot path A/B)."""
+
+# (M, K, N) problems for the quantized-vs-dequant gate: a generic square-
+# ish matmul, a 1-row decode shape, and a llama-60m FFN-up prefill slice
+# (N=1376 exercises the quant-block column padding / tail scale group).
+GATE_SHAPES = ((512, 1024, 2048), (8, 512, 512), (256, 512, 1376))
+
+
+def quantized_dense_bench(key, *, rounds=12, inner=4) -> dict:
+    """quantized_dense fwd + fwd/bwd vs the dequantize-then-einsum
+    baseline on the dispatch default backend, measured with interleaved
+    paired rounds over GATE_SHAPES. Returns the gate verdict dict."""
+    backend = dispatch.default_backend("quantized_dense")
+    gate = {"backend": backend, "rounds": rounds, "inner": inner,
+            "criterion": "ratio_x >= 1.0 or ratio_x + 2*sem >= 1.0",
+            "shapes": [], "pass": True}
+
+    for si, (m, k, n) in enumerate(GATE_SHAPES):
+        x = jax.random.normal(jax.random.fold_in(key, si), (m, k),
+                              jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 20 + si),
+                              (k, n)) * 0.1
+        qt = quantize_blockwise(w, bits=8, symmetric=True)
+        shape = f"M={m};K={k};N={n}"
+
+        f_q = jax.jit(lambda a=x: ops.quantized_dense(
+            a, qt, dtype=jnp.float32, backend=backend))
+        f_d = jax.jit(lambda a=x: a @ quant.dequantize(qt, jnp.float32))
+        times = paired_times({"dequant": f_d, "quantized": f_q},
+                             rounds=rounds, inner=inner)
+        stat = paired_ratio(times, "dequant", "quantized")
+        us_q = float(np.median(times["quantized"]))
+        us_d = float(np.median(times["dequant"]))
+        emit("kernels/quantized_dense_fwd", us_q,
+             shape + f";backend={backend}")
+        emit("kernels/dequant_dense_fwd", us_d, shape)
+        emit("kernels/quantized_dense_fwd_speedup", stat["ratio_x"],
+             shape + f";unit=x;baseline=dequant-einsum;sem={stat['sem']:.4f}"
+             f";rounds={stat['rounds']}")
+        ok = (stat["ratio_x"] >= 1.0
+              or stat["ratio_x"] + 2.0 * stat["sem"] >= 1.0)
+        gate["shapes"].append({"shape": [m, k, n], **stat,
+                               "us_quantized": us_q, "us_dequant": us_d,
+                               "pass": ok})
+        gate["pass"] = gate["pass"] and ok
+
+    # fwd + bwd (dL/dx and dL/dW) through the custom VJP vs autodiff of
+    # the dequant einsum — training path, QVirtual weight (shadow dL/dW)
+    m, k, n = GATE_SHAPES[0]
     x = jax.random.normal(key, (m, k), jnp.float32)
     w = jax.random.normal(jax.random.fold_in(key, 20), (k, n)) * 0.1
     qt = quantize_blockwise(w, bits=8, symmetric=True)
-    backend = dispatch.default_backend("quantized_dense")
     shape = f"M={m};K={k};N={n}"
-
-    f_q = jax.jit(lambda a: ops.quantized_dense(a, qt, dtype=jnp.float32,
-                                                backend=backend))
-    f_d = jax.jit(lambda a: a @ quant.dequantize(qt, jnp.float32))
-    us_q = _time(f_q, x, iters=iters)
-    us_d = _time(f_d, x, iters=iters)
-    emit("kernels/quantized_dense_fwd", us_q, shape + f";backend={backend}")
-    emit("kernels/dequant_dense_fwd", us_d, shape)
-
-    # fwd + bwd (dL/dx and dL/dW) through the custom VJP vs autodiff of
-    # the dequant einsum
     wv = quant.virtualize(qt)
 
     @jax.jit
@@ -114,15 +170,21 @@ def quantized_dense_bench(key, m=512, k=1024, n=2048, iters=5):
         return jax.grad(f, argnums=(0, 1))(a, wfull)
 
     wd = quant.dequantize(qt, jnp.float32)
-    us_qg = _time(g_q, x, wv.shadow, iters=iters)
-    us_dg = _time(g_d, x, wd, iters=iters)
-    emit("kernels/quantized_dense_fwdbwd", us_qg,
+    times = paired_times(
+        {"dequant": lambda: g_d(x, wd),
+         "quantized": lambda: g_q(x, wv.shadow)},
+        rounds=rounds, inner=max(inner // 2, 1))
+    stat = paired_ratio(times, "dequant", "quantized")
+    emit("kernels/quantized_dense_fwdbwd",
+         float(np.median(times["quantized"])),
          shape + f";backend={backend}")
-    emit("kernels/dequant_dense_fwdbwd", us_dg, shape)
-    emit("kernels/quantized_dense_fwd_speedup", us_d / us_q,
-         shape + ";unit=x;baseline=dequant-einsum")
-    emit("kernels/quantized_dense_fwdbwd_speedup", us_dg / us_qg,
-         shape + ";unit=x;baseline=dequant-einsum")
+    emit("kernels/dequant_dense_fwdbwd",
+         float(np.median(times["dequant"])), shape)
+    emit("kernels/quantized_dense_fwdbwd_speedup", stat["ratio_x"],
+         shape + f";unit=x;baseline=dequant-einsum;sem={stat['sem']:.4f}")
+    gate["fwdbwd"] = {"shape": [m, k, n], **stat}
+    profile.maybe_attach(gate)
+    return gate
 
 
 def fused_update_bench(key, m=2048, n=1024, r=128, iters=3):

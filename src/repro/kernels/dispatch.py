@@ -32,15 +32,23 @@ Block-size autotune table
 :func:`tuned_blocks` returns the block-size kwargs for a (op, shape, dtype,
 backend) query. Shapes are bucketed to the next power of two so the table
 stays small; exact entries win over bucketed entries, which win over the
-per-op defaults. The table is seeded with hand-tuned values for the fused
-update kernel and the matmuls (VMEM-fitting tiles, MXU-aligned); it is a
-plain dict so future PRs can extend it from real autotune sweeps.
+per-op defaults.
+
+The table is PERSISTED: entries live in ``autotune_table.json`` next to
+this module (override the path with ``REPRO_AUTOTUNE_TABLE``) and are
+written by the real sweep in ``benchmarks/autotune_blocks.py`` — run it
+with ``REPRO_REGEN_AUTOTUNE=1`` to refresh the committed table in place.
+Each entry records its ``source`` ("seed" for the original hand-tuned
+values, "measured" for sweep results) so stale guesses are
+distinguishable from data. :func:`register_tuned` adds in-process
+entries (tests, a live tuner) that win over the file.
 """
 from __future__ import annotations
 
 import functools
+import json
 import os
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 
@@ -143,28 +151,80 @@ _DEFAULT_BLOCKS: Dict[str, Dict[str, int]] = {
     "flash_attention": {"bq": 128, "bkv": 128},
 }
 
-# (op, backend, bucketed shape, dtype) -> block kwargs. Shape is the
-# bucketed problem shape (op-specific meaning, documented in
-# docs/kernels.md). dtype "" matches any dtype.
-_TABLE: Dict[Tuple[str, str, Tuple[int, ...], str], Dict[str, int]] = {
-    # Fused update: small rows → one row-block avoids grid overhead;
-    # huge rows → taller tiles amortize the resident P dequant.
-    ("fused_qgalore_update", "pallas-tpu", (1024, 1024), ""):
-        {"bm": 256, "bn": 1024},
-    ("fused_qgalore_update", "pallas-tpu", (4096, 4096), ""):
-        {"bm": 512, "bn": 1024},
-    ("fused_qgalore_update", "pallas-interpret", (256, 256), ""):
-        {"bm": 256, "bn": 256},
-    # INT8 matmul: bf16 activations halve VMEM → wider N tiles.
-    ("int8_matmul", "pallas-tpu", (4096, 4096), "bfloat16"):
-        {"bm": 256, "bn": 512, "bk": 512},
-    # Transposed INT8 matmul (dL/dx, tied head): contraction runs along the
-    # quant-block axis, so wide bn tiles amortize the scale broadcasts.
-    ("int8_matmul_t", "pallas-tpu", (4096, 4096), "bfloat16"):
-        {"bm": 256, "bn": 512, "bk": 256},
-    ("int4_matmul", "pallas-tpu", (4096, 4096), ""):
-        {"bm": 256, "bk": 1024},
-}
+# -- persisted autotune table ------------------------------------------------
+#
+# Entries are keyed (op, backend, bucketed shape, dtype) -> block kwargs
+# (dtype "" matches any dtype). They live in autotune_table.json next to
+# this module; benchmarks/autotune_blocks.py measures and rewrites it.
+# _RUNTIME_TABLE holds in-process registrations (register_tuned) that win
+# over the file.
+
+_Key = Tuple[str, str, Tuple[int, ...], str]
+
+_TABLE_ENV = "REPRO_AUTOTUNE_TABLE"
+_TABLE_FILE = os.path.join(os.path.dirname(__file__), "autotune_table.json")
+
+_RUNTIME_TABLE: Dict[_Key, Dict[str, int]] = {}
+
+
+def table_path() -> str:
+    return os.environ.get(_TABLE_ENV) or _TABLE_FILE
+
+
+def _entry_key(e: Dict[str, Any]) -> _Key:
+    return (e["op"], e["backend"], tuple(int(d) for d in e["shape"]),
+            e.get("dtype", ""))
+
+
+@functools.lru_cache(maxsize=8)
+def _load_table(path: str) -> Dict[_Key, Dict[str, int]]:
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        doc = json.load(f)
+    table: Dict[_Key, Dict[str, int]] = {}
+    for e in doc.get("entries", ()):
+        table[_entry_key(e)] = {k: int(v) for k, v in e["blocks"].items()}
+    return table
+
+
+def reload_table() -> None:
+    """Drop the cached file table (after a sweep rewrote it, or a test
+    pointed REPRO_AUTOTUNE_TABLE elsewhere)."""
+    _load_table.cache_clear()
+
+
+def load_table_entries(path: Optional[str] = None) -> List[Dict[str, Any]]:
+    """The raw entry list from the persisted table (sweep merge source)."""
+    p = path or table_path()
+    if not os.path.exists(p):
+        return []
+    with open(p) as f:
+        return list(json.load(f).get("entries", ()))
+
+
+def save_table_entries(entries: List[Dict[str, Any]],
+                       path: Optional[str] = None) -> str:
+    """Write the table document; deduplicates by key (last entry wins)."""
+    p = path or table_path()
+    merged: Dict[_Key, Dict[str, Any]] = {}
+    for e in entries:
+        merged[_entry_key(e)] = e
+    doc = {"version": 1,
+           "entries": [merged[k] for k in sorted(merged)]}
+    with open(p, "w") as f:
+        json.dump(doc, f, indent=1, sort_keys=True)
+        f.write("\n")
+    reload_table()
+    return p
+
+
+def register_tuned(op: str, backend: str, shape: Tuple[int, ...],
+                   blocks: Dict[str, int], dtype: str = "") -> None:
+    """In-process table entry (wins over the persisted file). ``shape`` is
+    bucketed here, so callers pass the raw problem shape."""
+    key = (op, backend, tuple(_bucket(int(d)) for d in shape), dtype)
+    _RUNTIME_TABLE[key] = dict(blocks)
 
 
 def fit_block(dim: int, request: int, multiple_of: int = 1) -> int:
@@ -181,8 +241,12 @@ def fit_block(dim: int, request: int, multiple_of: int = 1) -> int:
     are degenerate fall back to ``dim`` itself — one tile over that axis,
     matching the kernels' old ``min(tile, dim)`` clamp — rather than a
     grid of 1-wide tiles.
+
+    The returned tile is never larger than ``dim`` (nor than its
+    power-of-two bucket): a table entry tuned for a big bucket cannot
+    force a small decode/smoke problem to pad up to the entry's tile.
     """
-    request = max(1, min(request, dim))
+    request = max(1, min(request, dim, _bucket(dim)))
     best = 1
     for d in range(request, 0, -1):
         if dim % d == 0 and d % multiple_of == 0:
@@ -193,19 +257,41 @@ def fit_block(dim: int, request: int, multiple_of: int = 1) -> int:
     return best
 
 
+def pick_tile(dim: int, request: int, multiple_of: int = 8) -> int:
+    """Tile size for a dimension the caller is about to PAD: the smallest
+    multiple of ``multiple_of`` covering ``dim``, capped at ``request``.
+
+    :func:`fit_block` fits a tile *into* a fixed (already padded)
+    dimension; this is the converse for the wrappers that pad rows up to
+    the tile. Picking the tile from the TRUE dimension first fixes the
+    tail-block waste on exactly the shapes serving hits: a 1-row decode
+    matmul pads to one 8-row tile (the f32 sublane) instead of the old
+    hard-coded 128-row boundary, and a 100-row prefill pads to 104 rows
+    instead of 128. The caller then pads ``dim`` up to a multiple of the
+    returned tile, so the Pallas grid division is exact.
+    """
+    need = -(-max(dim, 1) // multiple_of) * multiple_of
+    return max(multiple_of, min(max(request, multiple_of), need))
+
+
 def tuned_blocks(op: str, shape: Tuple[int, ...],
                  dtype: str = "", backend: Optional[str] = None
                  ) -> Dict[str, int]:
     """Block-size kwargs for ``op`` on a problem of ``shape``.
 
     ``shape`` is the op's 2-D problem footprint (e.g. the weight matrix
-    (M, N) for the fused update). Lookup order: exact (bucketed shape,
-    dtype) → (bucketed shape, any dtype) → per-op defaults.
+    (M, N) for the fused update). Lookup order: in-process registrations
+    (:func:`register_tuned`) → the persisted table (exact (bucketed
+    shape, dtype), then (bucketed shape, any dtype)) → per-op defaults.
     """
     backend = backend or default_backend(op)
     bshape = tuple(_bucket(int(d)) for d in shape)
+    table = _load_table(table_path())
     for dt in (dtype, ""):
-        hit = _TABLE.get((op, backend, bshape, dt))
+        key = (op, backend, bshape, dt)
+        hit = _RUNTIME_TABLE.get(key)
+        if hit is None:
+            hit = table.get(key)
         if hit is not None:
             return dict(hit)
     return dict(_DEFAULT_BLOCKS.get(op, {}))

@@ -1,24 +1,40 @@
-"""Pallas TPU kernels: BF16 activation × INT8 weight matmuls with in-VMEM
-block-wise dequantization.
+"""Pallas TPU kernels: BF16/F32 activation × INT8 weight matmuls with the
+dequant scale FUSED into the matmul — no dequantized weight tile in VMEM.
 
 TPU adaptation of the paper's INT8 GEMM (bitsandbytes on CUDA): v5e has no
 INT8 training GEMM, so the win is HBM traffic — weights stream at 1 byte
-instead of 2, dequantize in VMEM, and feed the MXU in BF16. Block layout
-matches the training representation: scales per (row, 256-col group), so the
-kernel consumes optimizer output with zero relayout.
+instead of 2 and feed the MXU as raw codes. Block layout matches the
+training representation: scales per (row, 256-col group), so the kernel
+consumes optimizer output with zero relayout.
 
-Two orientations over the SAME stored blocks:
+Two orientations over the SAME stored blocks, with the scale applied on
+opposite sides of the dot (the scale axis is the weight's ROW axis K times
+the column group, so where it can fuse depends on which axis contracts):
 
-* :func:`int8_matmul`   — ``x (M, K) @ deq(W (K, N))``  (forward / dL/dW-free)
-* :func:`int8_matmul_t` — ``g (M, N) @ deq(W (K, N))^T`` (backward dL/dx and
-  the tied-embedding head, which is a matmul against ``W_emb^T``)
+* :func:`int8_matmul` — ``x (M, K) @ deq(W (K, N))`` (forward / serving).
+  The contraction runs over K, where the scale VARIES, so a pure
+  accumulator epilogue is impossible; instead the per-group scale column
+  ``s[:, g]`` (a K-vector) folds into the activation operand:
+  ``out[:, g·B:(g+1)·B] += (x * s[:, g]) @ q[:, g·B:(g+1)·B]``.
+  One (BM, BK) scaled-activation operand per group replaces the old
+  (BK, BN) f32 dequantized weight tile.
+* :func:`int8_matmul_t` — ``g (M, N) @ deq(W (K, N))^T`` (backward dL/dx
+  and the tied-embedding head). The contraction runs over N — the quant
+  axis — so the scale is CONSTANT per (output column k, group g) and a
+  true accumulator epilogue applies: the raw-code partial dot
+  ``g[:, gg] @ q[:, gg]^T`` lands on the (BM, BK) accumulator scaled once
+  by ``s[:, gg]``.
 
-``int8_matmul`` grid: (M/BM, N/BN, K/BK), K innermost; f32 accumulator lives
-in a VMEM scratch across the K loop. BN is a multiple of the quant block
-(256) so each weight tile owns whole scale groups. ``int8_matmul_t`` walks
-(M/BM, K/BK, N/BN) with N innermost — the contraction runs along the
-quant-block axis, so each program still dequantizes whole scale groups and
-no transposed copy of the weight ever exists in HBM.
+Both associations change only the order of f32 multiplies (exact for the
+scale-by-code product; the x·s fold rounds once before the MXU instead of
+once after the dequant multiply), so they stay within the existing
+parity tolerances of the ref oracles — see kernels/ref.py, which mirrors
+the same association order.
+
+``int8_matmul`` grid: (M/BM, N/BN, K/BK), K innermost; f32 accumulator
+lives in a VMEM scratch across the K loop. BN is a multiple of the quant
+block (256) so each weight tile owns whole scale groups. ``int8_matmul_t``
+walks (M/BM, K/BK, N/BN) with N innermost.
 """
 from __future__ import annotations
 
@@ -36,13 +52,17 @@ def _kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, block: int, n_k: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[...].astype(jnp.float32)            # (BM, BK)
-    q = q_ref[...].astype(jnp.float32)            # (BK, BN)
+    q = q_ref[...]                                # (BK, BN) int8
     s = s_ref[...]                                # (BK, BN // block)
     BK, BN = q.shape
-    w = (q.reshape(BK, BN // block, block) * s[..., None]).reshape(BK, BN)
-    acc_ref[...] += jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    # Scale varies along the contraction axis K → fold it into the
+    # activation per quant group instead of materializing deq(W) in VMEM.
+    for g in range(BN // block):
+        xs = x * s[:, g][None, :]                 # (BM, BK)
+        acc_ref[:, g * block:(g + 1) * block] += jax.lax.dot_general(
+            xs, q[:, g * block:(g + 1) * block].astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_k - 1)
     def _done():
@@ -83,13 +103,19 @@ def _kernel_t(g_ref, q_ref, s_ref, o_ref, acc_ref, *, block: int, n_n: int):
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     g = g_ref[...].astype(jnp.float32)            # (BM, BN)
-    q = q_ref[...].astype(jnp.float32)            # (BK, BN)
+    q = q_ref[...]                                # (BK, BN) int8
     s = s_ref[...]                                # (BK, BN // block)
     BK, BN = q.shape
-    w = (q.reshape(BK, BN // block, block) * s[..., None]).reshape(BK, BN)
-    acc_ref[...] += jax.lax.dot_general(
-        g, w, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    # Contraction runs along N — the quant axis — so the scale applies
+    # ONCE per group on the (BM, BK) accumulator: a true epilogue, raw
+    # INT8 codes feed the MXU.
+    for gg in range(BN // block):
+        sl = slice(gg * block, (gg + 1) * block)
+        pdot = jax.lax.dot_general(
+            g[:, sl], q[:, sl].astype(jnp.float32),
+            (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)   # (BM, BK)
+        acc_ref[...] += pdot * s[:, gg][None, :]
 
     @pl.when(pl.program_id(2) == n_n - 1)
     def _done():
@@ -103,8 +129,9 @@ def int8_matmul_t(g, q, scale, *, block: int = 256, bm: int = 128,
     """g (M,N) bf16/f32 @ dequant(q (K,N) int8, scale (K, N/block))^T → (M,K).
 
     Streams the SAME int8 blocks as :func:`int8_matmul` (no transposed
-    weight copy); the contraction runs over N, the quant-block axis.
-    Shapes must tile evenly (the ops.py wrapper pads); BN % block == 0.
+    weight copy); the contraction runs over N, the quant-block axis, so
+    the scale multiply is a true accumulator epilogue. Shapes must tile
+    evenly (the ops.py wrapper pads); BN % block == 0.
     """
     M, N = g.shape
     K, Nq = q.shape

@@ -1,0 +1,91 @@
+"""Lightweight per-op profiling counters behind ``REPRO_PROFILE=1``.
+
+The quantized hot paths run inside ``jit``, so per-call wall time cannot
+be observed from Python without defeating the fusion being measured.
+What CAN be recorded cheaply and without perturbing the compiled graph:
+
+* **trace-time counters** — every ``ops`` wrapper calls :func:`record`
+  while tracing, logging how many times each kernel op is baked into a
+  compiled program and the HBM bytes / FLOPs one execution of that call
+  moves. Re-traces count again (that is itself a useful signal: an
+  unexpected recount means shape churn → recompiles).
+* **eager wall timers** — :func:`timed` wraps host-side regions (the
+  benches' timing loops, the autotune sweep) with a named wall-clock
+  accumulator.
+
+Everything is a no-op unless ``REPRO_PROFILE=1`` at call time, so the
+hooks cost one ``os.environ`` dict lookup on the trace path and nothing
+at execution time. The benches dump :func:`snapshot` into their JSON
+artifacts so the next perf gap is diagnosable from CI output instead of
+rerunning A/B sweeps by hand.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import time
+from collections import defaultdict
+from typing import Any, Dict, Optional
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_PROFILE", "0") == "1"
+
+
+def _new_row() -> Dict[str, float]:
+    return {"trace_calls": 0, "bytes_per_call": 0, "flops_per_call": 0,
+            "wall_us": 0.0, "wall_calls": 0}
+
+
+_COUNTS: Dict[str, Dict[str, float]] = defaultdict(_new_row)
+
+
+def record(op: str, *, nbytes: int = 0, flops: int = 0,
+           meta: Optional[Dict[str, Any]] = None) -> None:
+    """Trace-time hook: count one baked-in call of ``op`` and the HBM
+    bytes / FLOPs a single execution of it moves. ``meta`` (e.g. the
+    problem shape) is kept from the most recent call."""
+    if not enabled():
+        return
+    row = _COUNTS[op]
+    row["trace_calls"] += 1
+    row["bytes_per_call"] = int(nbytes)
+    row["flops_per_call"] = int(flops)
+    if meta:
+        row["meta"] = dict(meta)
+
+
+@contextlib.contextmanager
+def timed(name: str):
+    """Eager wall-clock accumulator for host-side regions."""
+    if not enabled():
+        yield
+        return
+    t0 = time.monotonic()
+    try:
+        yield
+    finally:
+        row = _COUNTS[name]
+        row["wall_us"] += (time.monotonic() - t0) * 1e6
+        row["wall_calls"] += 1
+
+
+def reset() -> None:
+    _COUNTS.clear()
+
+
+def snapshot() -> Dict[str, Dict[str, float]]:
+    return {op: dict(row) for op, row in sorted(_COUNTS.items())}
+
+
+def dump(path: str) -> None:
+    with open(path, "w") as f:
+        json.dump({"enabled": enabled(), "ops": snapshot()}, f, indent=2)
+
+
+def maybe_attach(report: Dict[str, Any]) -> None:
+    """Attach the current snapshot to a bench report dict (in place) when
+    profiling is on; no key is added otherwise."""
+    if enabled():
+        report["profile"] = snapshot()

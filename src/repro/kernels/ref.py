@@ -9,22 +9,35 @@ from repro.core import quant
 
 def int8_matmul_ref(x, q, scale, block: int):
     """x (M,K) @ dequant(q (K,N) int8, scale (K, N/block)) → (M,N) f32.
-    Symmetric (zero-point-free) weights, per-(row, block) scales."""
+    Symmetric (zero-point-free) weights, per-(row, block) scales.
+
+    Mirrors the fused-epilogue kernel's association: the scale (which
+    varies along the contraction axis K) folds into the activation per
+    quant group — ``out[:, g] = (x * s[:, g]) @ q[:, g]`` — so no
+    dequantized W is formed and kernel/oracle share one multiply order.
+    """
     K, N = q.shape
-    w = q.astype(jnp.float32).reshape(K, N // block, block) \
-        * scale[..., None]
-    w = w.reshape(K, N)
-    return x.astype(jnp.float32) @ w
+    G = N // block
+    xf = x.astype(jnp.float32)
+    q3 = q.astype(jnp.float32).reshape(K, G, block)
+    xs = xf[:, :, None] * scale[None, :, :]            # (M, K, G)
+    return jnp.einsum("mkg,kgb->mgb", xs, q3).reshape(x.shape[0], N)
 
 
 def int8_matmul_t_ref(g, q, scale, block: int):
     """g (M,N) @ dequant(q (K,N) int8, scale (K, N/block))^T → (M,K) f32.
-    Same stored blocks as :func:`int8_matmul_ref`, contracted over N."""
+    Same stored blocks as :func:`int8_matmul_ref`, contracted over N.
+
+    Mirrors the transposed kernel's true accumulator epilogue: the
+    contraction runs along the quant axis, so raw codes dot first and the
+    per-group scale lands once on the (M, K) partial accumulator.
+    """
     K, N = q.shape
-    w = q.astype(jnp.float32).reshape(K, N // block, block) \
-        * scale[..., None]
-    w = w.reshape(K, N)
-    return g.astype(jnp.float32) @ w.T
+    G = N // block
+    g3 = g.astype(jnp.float32).reshape(g.shape[0], G, block)
+    q3 = q.astype(jnp.float32).reshape(K, G, block)
+    pdot = jnp.einsum("mgb,kgb->mgk", g3, q3)          # raw-code dots
+    return jnp.einsum("mgk,kg->mk", pdot, scale)       # scale epilogue
 
 
 def int4_matmul_ref(g, packed, scale, zero, block: int):

@@ -47,6 +47,50 @@ def prompt_lengths(tokens, pad_id: Optional[int]) -> jax.Array:
     return (S - trailing).astype(jnp.int32)
 
 
+def check_prompt_lengths(batch, pad_id: Optional[int]) -> None:
+    """Host-side guard for the eager entry points: raise on any row with
+    zero valid tokens (explicit ``lengths`` or trailing-pad detection).
+    Inside jit the prefill gather only *clamps* — this is where empty
+    rows fail loudly instead."""
+    import numpy as np
+    if "lengths" in batch:
+        lens = np.asarray(batch["lengths"])
+    else:
+        lens = np.asarray(prompt_lengths(batch["tokens"], pad_id))
+    if (lens <= 0).any():
+        bad = np.nonzero(lens <= 0)[0].tolist()
+        raise ValueError(
+            f"empty prompt row(s) {bad}: every row needs >= 1 valid "
+            "token (an all-pad row would decode from garbage logits)")
+
+
+def matmul_shape_grid(bundle: ModelBundle, batch: int, prompt_len: int,
+                      *, decode: bool = False):
+    """The (M, K, N) problems the ``quantized_dense`` path hits during a
+    prefill (or one decode step, ``decode=True``) of this bundle — the
+    shape source for ``benchmarks/autotune_blocks.py``.
+
+    M is the flattened token count the wrapper sees; K/N come from the
+    config's projection shapes (attention in/out, FFN up/down, LM head).
+    Exotic families contribute extra matmuls, but these dominant shapes
+    are what the block tuner needs to cover the zoo's serving traffic.
+    """
+    cfg = bundle.cfg
+    M = batch * (1 if decode else prompt_len)
+    d, ff, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    hd = cfg.resolved_head_dim
+    q_out = cfg.num_heads * hd
+    kv_out = cfg.num_kv_heads * hd
+    shapes = {
+        (M, d, q_out + 2 * kv_out),   # attention in-projection
+        (M, q_out, d),                # attention out-projection
+        (M, d, ff),                   # FFN up/gate
+        (M, ff, d),                   # FFN down
+        (M, d, v),                    # LM head
+    }
+    return sorted(shapes)
+
+
 def build_prefill(bundle: ModelBundle, max_len: int,
                   pad_id: Optional[int] = None):
     """Returns prefill(params, batch) -> (last_logits, DecodeState).
@@ -97,10 +141,16 @@ def build_prefill(bundle: ModelBundle, max_len: int,
         else:
             lengths = prompt_lengths(batch["tokens"], pad_id)
         # head logits at each row's last valid position (h may carry a
-        # non-token prefix, e.g. VLM patch embeddings → offset).
+        # non-token prefix, e.g. VLM patch embeddings → offset). An
+        # all-pad row would make ``lengths - 1`` negative and
+        # take_along_axis silently wrap to the LAST position (garbage
+        # logits, decode writing KV at a wrapped slot) — clamp the gather
+        # in-graph; the host-side entry points (``generate``,
+        # ``Scheduler.submit``) reject empty rows loudly before tracing.
+        idx_lengths = jnp.maximum(lengths, 1)
         h = carry["h"]
         offset = h.shape[1] - prompt_len
-        idx = (lengths - 1 + offset)[:, None, None]
+        idx = (idx_lengths - 1 + offset)[:, None, None]
         h_last = jnp.take_along_axis(h, jnp.broadcast_to(
             idx, (h.shape[0], 1, h.shape[2])), axis=1)
         logits = bundle.head_logits(params, {**carry, "h": h_last})
@@ -161,9 +211,12 @@ def generate(bundle: ModelBundle, params, batch, *, steps: int,
     instead.
 
     Ragged prompts: pass per-row ``batch["lengths"]`` (or ``pad_id`` for
-    trailing-pad detection) — see :func:`build_prefill`.
+    trailing-pad detection) — see :func:`build_prefill`. Rows with zero
+    valid tokens are rejected here (loudly) rather than producing the
+    silently-wrapped logits an in-graph gather would.
     """
     key = key if key is not None else jax.random.PRNGKey(0)
+    check_prompt_lengths(batch, pad_id)
     prefill = jax.jit(build_prefill(bundle, max_len, pad_id=pad_id))
     decode = jax.jit(build_decode(bundle))
     logits, state = prefill(params, batch)

@@ -213,6 +213,7 @@ class Scheduler:
         self.temperature = temperature
         self.prompt_bucket = prompt_bucket
         self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._key0 = self._key   # snapshot: reset() restores it
         dtype = dtype if dtype is not None else jnp.bfloat16
 
         self._prefill = jax.jit(
@@ -238,7 +239,11 @@ class Scheduler:
 
     def reset(self) -> None:
         """Clear all serving state but keep the compiled programs — a fresh
-        pool without paying prefill/decode retrace (benchmark warm runs)."""
+        pool without paying prefill/decode retrace (benchmark warm runs).
+        The sampling key is restored to its construction-time snapshot so
+        warm rounds are bit-reproducible under ``temperature > 0`` (the
+        per-step/admission keys fold in from the same root every run)."""
+        self._key = self._key0
         self.pool = jax.tree_util.tree_map(jnp.zeros_like, self.pool)
         self.slots = [_Slot() for _ in range(self.num_slots)]
         self.cur_tokens = np.zeros((self.num_slots,), np.int32)
@@ -255,6 +260,11 @@ class Scheduler:
         """Queue a request; rejects it up front (nothing else is lost)
         when it cannot fit the cache window."""
         L = len(req.tokens)
+        if L == 0:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — every request needs "
+                ">= 1 token (an all-pad prefill row would decode from "
+                "garbage logits; see engine.check_prompt_lengths)")
         if L + req.max_new_tokens > self.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt {L} + max_new "

@@ -149,3 +149,83 @@ class TestFlashAttention:
         want = ref.flash_attention_ref(q, k, v, causal=True)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=2e-3, atol=2e-3)
+
+
+class TestFusedEpilogueServingShapes:
+    """The scale-in-epilogue kernels at the shapes serving actually hits:
+    non-tile-multiple M (1-row decode, ragged 9-row), prime K, and an N
+    that is not a quant-block multiple (llama-60m d_ff=1376 → padded
+    column tail + partially-real last scale group). Parity is against the
+    plain dequantize-then-matmul on BOTH the ref oracle backend and the
+    Pallas interpreter."""
+
+    SHAPES = [(1, 512, 1376), (9, 67, 160), (256, 256, 1376)]
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+    @pytest.mark.parametrize("M,K,N", SHAPES)
+    def test_forward_matches_dequant(self, backend, M, K, N):
+        x = _rand(20, (M, K))
+        w = _rand(21, (K, N), scale=0.5)
+        qt = quant.quantize_blockwise(w, bits=8, symmetric=True)
+        got = ops.quantized_dense(x, qt, dtype=jnp.float32,
+                                  backend=backend)
+        want = x @ quant.dequantize(qt, jnp.float32)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+    def test_dx_grad_plain_qtensor(self, backend):
+        """dL/dx through the no-shadow custom VJP (plain-QTensor serving
+        weights) streams the INT8 blocks through the transposed kernel
+        and must match autodiff of the dequant einsum."""
+        M, K, N = 9, 256, 1376
+        x = _rand(22, (M, K))
+        w = _rand(23, (K, N), scale=0.5)
+        qt = quant.quantize_blockwise(w, bits=8, symmetric=True)
+
+        def f_q(a):
+            out = ops.quantized_dense(a, qt, dtype=jnp.float32,
+                                      backend=backend)
+            return jnp.sum(out * out)
+
+        wd = quant.dequantize(qt, jnp.float32)
+
+        def f_d(a):
+            out = a @ wd
+            return jnp.sum(out * out)
+
+        gq = jax.grad(f_q)(x)
+        gd = jax.grad(f_d)(x)
+        scale = max(float(jnp.abs(gd).max()), 1.0)
+        np.testing.assert_allclose(np.asarray(gq) / scale,
+                                   np.asarray(gd) / scale,
+                                   rtol=2e-2, atol=2e-2)
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+    def test_qtensor_matches_qvirtual_bitwise(self, backend):
+        """Serving (plain QTensor, no-shadow core) and training
+        (QVirtual, shadow core) must produce bit-identical forwards —
+        both route through the same _i8_call."""
+        M, K, N = 9, 128, 352
+        x = _rand(24, (M, K))
+        w = _rand(25, (K, N), scale=0.5)
+        qt = quant.quantize_blockwise(w, bits=8, symmetric=True)
+        out_q = ops.quantized_dense(x, qt, dtype=jnp.float32,
+                                    backend=backend)
+        out_v = ops.quantized_dense(x, quant.virtualize(qt),
+                                    dtype=jnp.float32, backend=backend)
+        assert np.array_equal(np.asarray(out_q), np.asarray(out_v))
+
+    @pytest.mark.parametrize("backend", ["ref", "pallas-interpret"])
+    def test_transposed_head_matches_dequant(self, backend):
+        """quantized_dense_t (tied-embedding head) at a ragged M and a
+        vocab that is not a quant-block multiple."""
+        M, V, D = 9, 160, 96
+        x = _rand(26, (M, D))
+        w = _rand(27, (V, D), scale=0.5)
+        qt = quant.quantize_blockwise(w, bits=8, symmetric=True)
+        got = ops.quantized_dense_t(x, qt, dtype=jnp.float32,
+                                    backend=backend)
+        want = x @ quant.dequantize(qt, jnp.float32).T
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-2, atol=2e-2)
