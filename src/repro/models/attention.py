@@ -114,6 +114,36 @@ def chunked_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
     return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, dv).astype(q.dtype)
 
 
+def append_attention(q, k_cache, v_cache, q_positions) -> jax.Array:
+    """Chunk-append attention: C queries at absolute positions
+    ``q_positions`` (B, C) against a (B, Smax, KH, dh) cache that already
+    holds every position ``<= q_positions`` (this chunk's K/V included).
+
+    Mirrors :func:`_attend_dense` op-for-op (same einsum contraction, same
+    max/exp/sum order) with the causal mask taken against absolute
+    positions — masked keys contribute an exact 0 to the softmax sums, so
+    appending a prompt in chunks is bit-identical to one dense prefill
+    block over the unpadded prompt (asserted by ``tests/test_paged.py``).
+    """
+    B, C, H, dh = q.shape
+    KH = k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    G = H // KH
+    qf = q.astype(jnp.float32) / math.sqrt(dh)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    qg = qf.reshape(B, C, KH, G, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, kf)
+    kpos = jnp.arange(k_cache.shape[1])
+    mask = kpos[None, None] <= q_positions[:, :, None]        # (B, C, Skv)
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - jax.lax.stop_gradient(m))
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", e / z, vf)
+    return o.reshape(B, C, H, dv).astype(q.dtype)
+
+
 def decode_attention(q, k_cache, v_cache, length) -> jax.Array:
     """Single-token decode: q (B,1,H,dh) against a (B,S,KH,dh) cache with
     ``length`` valid positions (per batch, int32 (B,))."""
@@ -209,6 +239,32 @@ def gqa_decode(p, x, cfg: ModelConfig, *, cache: Tuple, length,
     v_cache = v_cache * (1 - oh[..., None, None]) + oh[..., None, None] * v
     o = decode_attention(q, k_cache, v_cache, length + 1)
     return dense(o.reshape(B, 1, -1), p["wo"], dtype), (k_cache, v_cache)
+
+
+def gqa_append(p, x, cfg: ModelConfig, *, cache: Tuple, positions, mask,
+               dtype=jnp.bfloat16):
+    """Chunk-append: x (B,C,D) holds the next C prompt tokens at absolute
+    ``positions`` (B,C); ``mask`` (B,C) marks valid (non-pad-tail) tokens.
+    Valid tokens write their K/V at their position; padded tail positions
+    write NOTHING (the cache stays bit-exact — a later chunk or decode
+    step owns those slots). Queries attend the whole cache under the
+    absolute causal mask, so chunked prefill reproduces one-shot prefill
+    bit-for-bit (see :func:`append_attention`)."""
+    k_cache, v_cache = cache
+    B, C, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions, dtype)
+    S = k_cache.shape[1]
+    # disjoint one-hot scatter of the chunk's K/V at its positions; padded
+    # chunk positions are masked OUT (no garbage ever enters the cache)
+    oh = jax.nn.one_hot(positions, S, dtype=k.dtype) \
+        * mask[..., None].astype(k.dtype)                     # (B, C, S)
+    written = oh.sum(axis=1)                                  # (B, S) 0/1
+    k_cache = k_cache * (1 - written[..., None, None]) \
+        + jnp.einsum("bcs,bchd->bshd", oh, k.astype(k_cache.dtype))
+    v_cache = v_cache * (1 - written[..., None, None]) \
+        + jnp.einsum("bcs,bchd->bshd", oh, v.astype(v_cache.dtype))
+    o = append_attention(q, k_cache, v_cache, positions)
+    return dense(o.reshape(B, C, -1), p["wo"], dtype), (k_cache, v_cache)
 
 
 def gqa_cache_spec(cfg: ModelConfig, batch: int, max_len: int, dtype):

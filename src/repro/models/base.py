@@ -84,6 +84,17 @@ class SegmentDef:
     decode: Optional[Callable] = None
     # (layer_params, carry, ctx) -> (carry, cache_slice)   [prefill]
     prefill: Optional[Callable] = None
+    # chunk-append (paged/chunked prefill): (layer_params, carry,
+    # cache_slice, ctx) -> (carry, cache_slice), where carry["h"] holds a
+    # CHUNK of C tokens starting at per-row position ctx["length"] and the
+    # cache already contains the first ctx["length"] positions. ctx carries
+    # "positions" (B, C) absolute, "chunk_mask" (B, C) valid-token mask
+    # (padded tail positions must write NOTHING into the cache). Appending
+    # a prompt chunk-by-chunk must be bit-identical to one-shot prefill —
+    # the contract the paged serving runtime (repro.serve.paged) asserts.
+    # Only row-independent attention segments can offer this (None for
+    # recurrent / capacity-routed MoE / MLA-absorbed blocks).
+    append: Optional[Callable] = None
     # (batch, max_len, dtype) -> per-layer cache spec pytree.
     # CONTRACT: every leaf leads with the batch axis (recurrent states
     # included), so stacked caches are (n_layers, batch, ...). The serving

@@ -98,6 +98,27 @@ def block_prefill(lp, carry, ctx, cfg: ModelConfig, *, moe_layer: bool,
     return {**carry, "h": h + f}, cache
 
 
+def block_append(lp, carry, cache, ctx, cfg: ModelConfig, *,
+                 q_chunk: int, dtype):
+    """Chunk-append (paged / chunked prefill): carry["h"] is a (B, C, D)
+    chunk of prompt tokens at absolute ``ctx["positions"]``; the cache
+    already holds every earlier position. Dense GQA only — MoE routing
+    capacity depends on the tokens routed together (chunking would change
+    which tokens drop), and MLA's absorbed decode contracts in a different
+    order than its prefill, so neither can promise the chunked==one-shot
+    bit-identity this path is gated on (``SegmentDef.append`` stays None
+    there)."""
+    h = carry["h"]
+    x = rmsnorm(h, lp["attn_norm"], cfg.rmsnorm_eps)
+    a, cache = attention.gqa_append(lp["attn"], x, cfg, cache=cache,
+                                    positions=ctx["positions"],
+                                    mask=ctx["chunk_mask"], dtype=dtype)
+    h = h + a
+    x = rmsnorm(h, lp["ffn_norm"], cfg.rmsnorm_eps)
+    f = ffn_apply(lp["ffn"], x, cfg.ffn_activation, dtype)
+    return {**carry, "h": h + f}, cache
+
+
 def block_decode(lp, carry, cache, ctx, cfg: ModelConfig, *,
                  moe_layer: bool, dtype):
     h = carry["h"]                              # (B, 1, D)
@@ -240,6 +261,9 @@ def build(cfg: ModelConfig, *, q_chunk: int = 1024,
                                       dtype=dtype),
             decode=functools.partial(block_decode, cfg=cfg, moe_layer=is_moe,
                                      dtype=dtype),
+            append=(functools.partial(block_append, cfg=cfg,
+                                      q_chunk=q_chunk, dtype=dtype)
+                    if not is_moe and cfg.attention != "mla" else None),
             cache_spec=functools.partial(_cache_spec, cfg),
         )
         for (name, n, is_moe) in segs)

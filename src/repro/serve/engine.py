@@ -160,8 +160,97 @@ def build_prefill(bundle: ModelBundle, max_len: int,
     return prefill
 
 
-def build_decode(bundle: ModelBundle):
-    """Returns decode(params, state, tokens (B,1)) -> (logits, new_state)."""
+def append_ok(bundle: ModelBundle) -> bool:
+    """True ⇔ this bundle supports chunk-append prefill — the substrate of
+    the paged serving runtime (``repro.serve.paged``). Requirements: every
+    segment offers ``SegmentDef.append`` (row-independent causal attention
+    with per-position cache writes), ragged prompts are exact
+    (``ragged_prefill_ok`` — chunk tails are right-padded inside a chunk),
+    and there is no per-request ``decode_extras`` state."""
+    return (bundle.ragged_prefill_ok and not bundle.decode_extras
+            and all(seg.append is not None for seg in bundle.segments))
+
+
+def build_append(bundle: ModelBundle, max_len: int, capture=None):
+    """Returns append(params, state, tokens (B,C), chunk_len (B,)) ->
+    (last_logits, new_state) — chunk-continuation prefill.
+
+    ``capture``: optional ``(new_cache_slice, ctx) -> pytree`` hook applied
+    to each layer's updated cache INSIDE the layer scan; the returned
+    state then carries the captured pytrees instead of full caches. The
+    paged runtime uses this to extract just the chunk's freshly written
+    K/V (a per-position gather the one-hot cache update fuses into) so
+    the full updated views are never materialized.
+
+    ``state`` already holds the first ``state.lengths`` positions of each
+    row's prompt; ``tokens`` carries the next chunk (right-padded to C,
+    per-row valid count ``chunk_len``). Valid tokens write their K/V at
+    absolute positions ``lengths + i`` (padded tail positions write
+    nothing), queries attend the whole cache under the absolute causal
+    mask, and the returned logits sit at each row's LAST VALID chunk
+    position. Running a prompt through ``append`` chunk-by-chunk (any
+    chunking, including one chunk of the full prompt) is bit-identical to
+    :func:`build_prefill` — the invariant the paged serving runtime and
+    its prefix cache rest on (``tests/test_paged.py``).
+
+    Only :func:`append_ok` bundles qualify; like ragged prefill this
+    leans on row/positional independence, which recurrent families,
+    capacity-routed MoE, and MLA's absorbed decode cannot offer.
+    """
+    if not append_ok(bundle):
+        raise ValueError(
+            f"{bundle.cfg.name}: chunk-append prefill requires "
+            "row-independent attention segments (SegmentDef.append) and "
+            "ragged_prefill_ok — this bundle must use one-shot prefill")
+
+    def append(params, state: DecodeState, tokens, chunk_len):
+        B, C = tokens.shape
+        if C == 1:
+            # XLA lowers M=1 matmuls through a different (gemv-style)
+            # contraction than M>=2, breaking bit-identity with one-shot
+            # prefill by ~1 ulp — pad width-1 chunks to width 2; the pad
+            # position is masked so it writes nothing and costs nothing.
+            tokens = jnp.pad(tokens, ((0, 0), (0, 1)))
+            C = 2
+        carry, _ = bundle.embed(params, {"tokens": tokens})
+        base = state.lengths.astype(jnp.int32)
+        chunk_len = chunk_len.astype(jnp.int32)
+        positions = base[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+        mask = jnp.arange(C, dtype=jnp.int32)[None] < chunk_len[:, None]
+        ctx = {"length": base, "positions": positions, "chunk_mask": mask,
+               "max_len": max_len}
+        new_caches: Dict[str, Any] = {}
+        for i, seg in enumerate(bundle.segments):
+            key = bundle.seg_key(i)
+            def body(c, xs, _seg=seg):
+                lp, cache = xs
+                new_c, new_cache = _seg.append(lp, c, cache, ctx)
+                if capture is not None:
+                    new_cache = capture(new_cache, ctx)
+                return new_c, new_cache
+            from repro.models.base import scan_layers
+            carry, new_cache = scan_layers(
+                body, carry, (params[key], state.caches[key]))
+            new_caches[key] = new_cache
+        # head logits at each row's last valid chunk position (clamped —
+        # callers never send chunk_len 0, see check_prompt_lengths)
+        h = carry["h"]
+        idx = (jnp.maximum(chunk_len, 1) - 1)[:, None, None]
+        h_last = jnp.take_along_axis(h, jnp.broadcast_to(
+            idx, (h.shape[0], 1, h.shape[2])), axis=1)
+        logits = bundle.head_logits(params, {**carry, "h": h_last})
+        return logits, DecodeState(new_caches, base + chunk_len,
+                                   state.extras)
+
+    return append
+
+
+def build_decode(bundle: ModelBundle, capture=None):
+    """Returns decode(params, state, tokens (B,1)) -> (logits, new_state).
+
+    ``capture``: optional ``(new_cache_slice, ctx) -> pytree`` hook, as in
+    :func:`build_append` — the returned state's caches are then the
+    captured pytrees (e.g. just this step's K/V), not full caches."""
     def decode(params, state: DecodeState, tokens):
         if bundle.embed_decode is not None:
             carry, ctx = bundle.embed_decode(params, tokens, state.extras)
@@ -177,6 +266,8 @@ def build_decode(bundle: ModelBundle):
             def body(c, xs, _seg=seg):
                 lp, cache = xs
                 new_c, new_cache = _seg.decode(lp, c, cache, ctx)
+                if capture is not None:
+                    new_cache = capture(new_cache, ctx)
                 return new_c, new_cache
             from repro.models.base import scan_layers
             carry, new_cache = scan_layers(

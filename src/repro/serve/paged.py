@@ -1,0 +1,952 @@
+"""Paged serving runtime: block KV pool + radix prefix sharing + chunked
+prefill (serving v2 — see ``docs/serving.md``).
+
+The slot scheduler (``repro.serve.scheduler``) reserves ``max_len``
+contiguous KV positions per slot — memory scales with the worst case, a
+shared system prompt re-prefills per request, and a long prompt's one-shot
+prefill stalls every in-flight decode. This module keeps the scheduler's
+continuous-batching control flow but swaps the pool for vLLM-style paging:
+
+* **Block pool** — cache leaves are ``(L, num_blocks, block_size, …)``
+  (``SegmentDef.cache_spec`` with the block axis where the batch axis
+  normally sits, so the batch-major contract and the shard rules carry
+  over). A host-side ``(num_slots, MB)`` **block table** maps each slot's
+  logical KV positions to physical blocks; :class:`BlockAllocator` hands
+  blocks out of a free list with refcounts (shared blocks live until the
+  last user derefs). Physical block 0 is reserved **scratch**: unallocated
+  table entries and dead-slot decode writes land there, so the jitted
+  programs never branch on allocation state.
+* **jit-stable gather + two-phase write** — one step gathers each slot's
+  blocks into a contiguous ``(L, S, MB·block_size, …)`` view (``jnp.take``
+  at traced indices) and runs the unmodified ``engine.build_decode`` /
+  ``engine.build_append`` over it. The compute program is READ-ONLY on the
+  pool: it returns just the freshly written K/V (captured inside the layer
+  scan via the ``capture=`` hook — the one-hot cache update fuses into the
+  capture gather, so updated full views are never materialized) plus a
+  flat ``(physical block, offset)`` write plan; :func:`pool_write_kv`
+  applies the plan as its own donated pure-write dispatch. A scatter
+  inside the compute program would make the pool both gather-input and
+  scatter-output — XLA cannot alias that, and every step would copy the
+  whole pool. Shared prefix blocks are never written by decode: a slot's
+  write position is always ``>=`` its private-suffix start.
+* **Radix prefix cache** — ``repro.serve.radix`` maps block-aligned token
+  prefixes to physical blocks; admission maps matched blocks straight into
+  the new slot's table (+1 ref each) and prefill starts after them.
+  Matching is capped one token short of the prompt so at least one suffix
+  token runs through prefill (the first-token logits must be produced).
+  When the free list drains, LRU trie leaves with no other users are
+  evicted; if the pool is still dry mid-decode, the youngest running slot
+  is **preempted** — its blocks freed and the request requeued as a
+  continuation (prompt + emitted tokens, see ``Request.cont``).
+* **Chunked prefill** — prompts run through ``engine.build_append`` in
+  fixed-width chunks, one chunk per prefilling slot per scheduler step in
+  a SINGLE batched dispatch, interleaved with the batched decode step — a
+  long prompt no longer stalls in-flight decodes, and concurrent prompts
+  no longer serialize behind each other. Prefilling rows are compacted to
+  a power-of-two bucket before dispatch (jit retraces once per bucket), so
+  append compute scales with live prefill rows, not pool size.
+  Chunked append is bit-identical to one-shot prefill (the
+  ``SegmentDef.append`` contract), so the paged engine is token-identical
+  to the slot engine under greedy decode (``tests/test_paged.py``).
+
+Admission backpressure: ``submit`` raises only for requests that can
+NEVER fit (window or whole-pool bound); a momentarily-full pool just
+queues (``stats["admission_blocked"]`` counts deferrals).
+
+Requires :func:`engine.append_ok` bundles — dense GQA transformer
+families. Recurrent/MoE/MLA/enc-dec stay on the slot backend
+(``make_scheduler`` in ``repro.serve.scheduler`` picks).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelBundle
+from repro.serve import engine
+from repro.serve.engine import DecodeState
+from repro.serve.radix import RadixCache
+from repro.serve.scheduler import Completion, Request, Scheduler
+
+
+# ---------------------------------------------------------------------------
+# Block allocator
+# ---------------------------------------------------------------------------
+
+class BlockAllocator:
+    """Refcounted free-list allocator over ``num_blocks`` physical blocks.
+
+    Block 0 is reserved scratch (pinned, never allocated): unallocated
+    block-table entries point at it so gathers/scatters at dead or
+    not-yet-filled positions stay in-bounds without branching.
+
+    Invariant (property-tested): every block is either scratch, on the
+    free list with refcount 0, or allocated with refcount >= 1 — derefs
+    below zero and refs of free blocks raise instead of corrupting the
+    pool.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (scratch + 1 usable), "
+                             f"got {num_blocks}")
+        self.num_blocks = num_blocks
+        self.refcount = np.zeros((num_blocks,), np.int32)
+        self.refcount[0] = 1                      # scratch, pinned forever
+        self._free = deque(range(1, num_blocks))
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1
+
+    def alloc(self) -> Optional[int]:
+        """Pop a free block (refcount 1) or None when the pool is dry."""
+        if not self._free:
+            return None
+        p = self._free.popleft()
+        self.refcount[p] = 1
+        return p
+
+    def ref(self, p: int) -> None:
+        """Add a reference to a LIVE block (prefix sharing)."""
+        if p == 0:
+            raise ValueError("block 0 is scratch — never share it")
+        if self.refcount[p] <= 0:
+            raise ValueError(f"ref of free block {p}")
+        self.refcount[p] += 1
+
+    def deref(self, p: int) -> None:
+        """Drop a reference; the block returns to the free list at zero."""
+        if p == 0:
+            raise ValueError("block 0 is scratch — never free it")
+        if self.refcount[p] <= 0:
+            raise ValueError(f"double free of block {p}")
+        self.refcount[p] -= 1
+        if self.refcount[p] == 0:
+            self._free.append(p)
+
+    def reset(self) -> None:
+        self.refcount[:] = 0
+        self.refcount[0] = 1
+        self._free = deque(range(1, self.num_blocks))
+
+    def check(self) -> None:
+        """Assert the pool invariant (tests)."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate blocks on the free list")
+        for p in range(1, self.num_blocks):
+            rc = int(self.refcount[p])
+            if (p in free) != (rc == 0):
+                raise AssertionError(
+                    f"block {p}: refcount {rc} vs free-list "
+                    f"{'present' if p in free else 'absent'}")
+
+
+# ---------------------------------------------------------------------------
+# jitted programs: gather view → engine step → scatter written block
+# ---------------------------------------------------------------------------
+
+def _gather_views(caches, tables, MB: int, block_size: int):
+    """Per-slot contiguous views of the block pool: leaf
+    ``(L, NB, blk, …)`` + tables ``(S, MB)`` → ``(L, S, MB·blk, …)``.
+    Row-major take order makes the single reshape land block m's positions
+    at view offset ``m·blk`` — the slot's logical KV timeline."""
+    S = tables.shape[0]
+
+    def g(leaf):
+        v = jnp.take(leaf, tables.reshape(-1), axis=1)
+        return v.reshape(leaf.shape[0], S, MB * block_size,
+                         *leaf.shape[3:])
+
+    return {k: jax.tree_util.tree_map(g, c) for k, c in caches.items()}
+
+
+def _take_pos(leaf, pos):
+    """Gather positions ``pos`` (B, P) out of a cache leaf (B, T, …) →
+    (B, P, …): the freshly written K/V of this step, recovered WITHOUT
+    materializing the updated view — the segments' one-hot cache update
+    is elementwise, so XLA fuses it into this gather and computes only
+    the gathered positions."""
+    idx = jnp.minimum(pos, leaf.shape[1] - 1)
+    for _ in range(leaf.ndim - 2):
+        idx = idx[..., None]
+    idx = jnp.broadcast_to(idx, pos.shape + leaf.shape[2:])
+    return jnp.take_along_axis(leaf, idx, axis=1)
+
+
+def _capture_decode(new_cache, ctx):
+    """Engine ``capture`` hook: keep only position ``length`` of each
+    updated cache leaf — the one K/V this decode step wrote."""
+    pos = ctx["length"].astype(jnp.int32)[:, None]
+    return jax.tree_util.tree_map(lambda l: _take_pos(l, pos), new_cache)
+
+
+def _capture_append(new_cache, ctx):
+    """Engine ``capture`` hook: keep only the chunk's absolute positions
+    of each updated cache leaf — the C K/Vs this append chunk wrote
+    (masked tail columns carry garbage; the write plan scratches them)."""
+    pos = ctx["positions"].astype(jnp.int32)
+    return jax.tree_util.tree_map(lambda l: _take_pos(l, pos), new_cache)
+
+
+def _flatten_kv(captured):
+    """Captured leaves (L, B, P, …) → (L, B·P, …), row-major — the layout
+    :func:`pool_write_kv` expects alongside flat ``phys``/``off``."""
+    return {
+        k: jax.tree_util.tree_map(
+            lambda l: l.reshape((l.shape[0], -1) + l.shape[3:]), c)
+        for k, c in captured.items()}
+
+
+def _append_write_plan(tables_g, base, chunk_len, C: int,
+                       block_size: int, MB: int):
+    """Pool targets for a chunk append: position ``base + i`` of row r
+    lands in block ``tables_g[r, (base+i)//blk]`` at offset ``%blk``;
+    columns past ``chunk_len`` (and padded rows) redirect to scratch
+    block 0. Returns flat ``phys``/``off`` (g·C,) in capture order."""
+    pos = base[:, None] + jnp.arange(C, dtype=jnp.int32)[None]
+    valid = jnp.arange(C, dtype=jnp.int32)[None] < chunk_len[:, None]
+    posc = jnp.clip(pos, 0, MB * block_size - 1)
+    phys = jnp.take_along_axis(tables_g, posc // block_size, axis=1)
+    phys = jnp.where(valid, phys, 0)
+    return phys.reshape(-1), (posc % block_size).reshape(-1)
+
+
+def pool_write_kv(caches, phys, off, kvs):
+    """Phase-2 pool write: set K/V at (block ``phys``, offset ``off``) —
+    ``kvs`` leaves (L, N, …) against pool leaves (L, NB, blk, …).
+
+    Kept as its OWN jitted dispatch (donated pool, pure write) instead of
+    scattering inside the compute programs: there the pool is also the
+    gather's input, so XLA cannot alias the update and every step copies
+    the whole pool; here donation leaves only the N written positions.
+    Scratch-bound entries may collide at block 0 — content is dead."""
+    def one(big, kv):
+        return big.at[:, phys, off].set(kv.astype(big.dtype))
+
+    return {k: jax.tree_util.tree_map(one, caches[k], kvs[k])
+            for k in caches}
+
+
+def build_paged_decode_step(bundle: ModelBundle, block_size: int, MB: int,
+                            temperature: float = 0.0, pad_id: int = 0):
+    """One batched decode step over the block pool.
+
+    Gather every slot's view, run ``engine.build_decode`` on it (per-slot
+    ``lengths`` mask exactly as in the slot pool — scratch garbage beyond
+    ``lengths`` contributes exact zeros), and return the ONE K/V each
+    slot wrote (captured in-scan, never materializing updated views) plus
+    its pool target for :func:`pool_write_kv`. Inactive slots redirect
+    their write to scratch block 0. The pool itself is READ-ONLY here —
+    that is what lets the phase-2 write alias it in place.
+    """
+    decode = engine.build_decode(bundle, capture=_capture_decode)
+
+    def step(params, caches, tables, lengths, tokens, active, key):
+        views = _gather_views(caches, tables, MB, block_size)
+        state = DecodeState(views, lengths, {})
+        logits, new = decode(params, state, tokens[:, None])
+        toks = engine.sample(logits, key, temperature)
+        toks = jnp.where(active, toks, pad_id)
+
+        pos = jnp.clip(lengths.astype(jnp.int32), 0,
+                       MB * block_size - 1)
+        phys = jnp.take_along_axis(tables, (pos // block_size)[:, None],
+                                   axis=1)[:, 0]
+        phys = jnp.where(active, phys, 0)
+        new_lengths = lengths + active.astype(lengths.dtype)
+        return (toks, new_lengths, phys, pos % block_size,
+                _flatten_kv(new.caches))
+
+    return step
+
+
+def build_paged_append(bundle: ModelBundle, block_size: int, MB: int,
+                       chunk: int, temperature: float = 0.0):
+    """One BATCHED chunk of paged prefill over a COMPACTED row set: the
+    ``g`` prefilling slots named by ``psids`` advance up to ``chunk``
+    tokens in a single dispatch.
+
+    Compaction is the throughput lever: prefill compute scales with rows
+    × chunk width, and late-admitted stragglers would otherwise pad every
+    idle slot to full width (at 8 slots / 1 prefilling, 8× the useful
+    work). The host buckets ``g`` to the next power of two — jit retraces
+    once per bucket shape — and pads ``psids`` with slot 0 / ``chunk_len
+    0`` rows, which compute garbage that is masked and scatter to scratch.
+
+    Gathers only the compacted rows' views, runs ``engine.build_append``
+    (bit-identical to one-shot prefill) with per-row ``chunk_len``, and
+    returns the chunk's freshly written K/Vs (captured in-scan) plus
+    their pool targets for :func:`pool_write_kv`; masked tail columns
+    redirect to scratch block 0. Radix-shared prefix blocks are never in
+    the written range — a chunk starts at ``pos >= matched_len``, inside
+    the slot's private blocks — so prefix sharing needs no copy-on-write
+    here.
+
+    Also samples a first token PER ROW from each chunk's last-real-token
+    logits, using the admission key schedule (``fold_in(key, 2^31 +
+    admit_idx)``) — sampling in-program means a slot finishing its prompt
+    costs zero extra dispatches. Rows of unfinished prompts are garbage —
+    the scheduler only reads rows whose prompt just completed.
+    """
+    append = engine.build_append(bundle, MB * block_size,
+                                 capture=_capture_append)
+
+    def run(params, caches, tables, lengths, psids, tokens, chunk_len,
+            admit_idx, key):
+        tables_g = jnp.take(tables, psids, axis=0)          # (g, MB)
+        base = jnp.take(lengths, psids, axis=0).astype(jnp.int32)
+        views = _gather_views(caches, tables_g, MB, block_size)
+        state = DecodeState(views, base, {})
+        logits, new = append(params, state, tokens, chunk_len)
+
+        def sample_row(row, idx):
+            # uint32 wrap matches the host-side fold_in(key, 2**31 + i)
+            k = jax.random.fold_in(
+                key, jnp.uint32(2 ** 31) + idx.astype(jnp.uint32))
+            return engine.sample(row[None], k, temperature)[0]
+
+        toks = jax.vmap(sample_row)(logits, admit_idx)
+
+        # capture width: the engine pads width-1 chunks to 2
+        C = jax.tree_util.tree_leaves(new.caches)[0].shape[2]
+        phys, off = _append_write_plan(tables_g, base, chunk_len, C,
+                                       block_size, MB)
+        # duplicate padded psids rows add chunk_len 0 — harmless
+        new_lengths = lengths.at[psids].add(
+            chunk_len.astype(lengths.dtype))
+        return toks, new_lengths, phys, off, _flatten_kv(new.caches)
+
+    return run
+
+
+def build_paged_fused(bundle: ModelBundle, block_size: int, MB: int,
+                      chunk: int, temperature: float = 0.0,
+                      pad_id: int = 0):
+    """One scheduler step's decode AND prefill chunk in a single dispatch.
+
+    The prefilling and active slot sets are disjoint, so both programs
+    can run off the SAME gathered view (decode reads nothing the append
+    writes and vice versa) and their scatters land in disjoint physical
+    blocks (idle rows of either path redirect to scratch block 0). Fusing
+    halves the dispatch + gather cost of the mixed prefill/decode phase —
+    per-step host overhead is what dominates small-batch serving.
+
+    Decode runs over all ``S`` slots (a 1-token step is cheap); the
+    append side runs over the COMPACTED ``psids`` rows only — see
+    :func:`build_paged_append` for why compaction is the prefill
+    throughput lever and how padded rows stay harmless.
+    """
+    append = engine.build_append(bundle, MB * block_size,
+                                 capture=_capture_append)
+    decode = engine.build_decode(bundle, capture=_capture_decode)
+
+    def run(params, caches, tables, lengths, cur_tokens, active,
+            psids, tokens, chunk_len, admit_idx, akey, dkey):
+        views = _gather_views(caches, tables, MB, block_size)
+        state = DecodeState(views, lengths, {})
+
+        dlogits, dnew = decode(params, state, cur_tokens[:, None])
+        dtoks = engine.sample(dlogits, dkey, temperature)
+        dtoks = jnp.where(active, dtoks, pad_id)
+
+        tables_g = jnp.take(tables, psids, axis=0)          # (g, MB)
+        base = jnp.take(lengths, psids, axis=0).astype(jnp.int32)
+        aviews = {
+            k: jax.tree_util.tree_map(
+                lambda v: jnp.take(v, psids, axis=1), c)
+            for k, c in views.items()}
+        astate = DecodeState(aviews, base, {})
+        alogits, anew = append(params, astate, tokens, chunk_len)
+
+        def sample_row(row, idx):
+            k = jax.random.fold_in(
+                akey, jnp.uint32(2 ** 31) + idx.astype(jnp.uint32))
+            return engine.sample(row[None], k, temperature)[0]
+
+        atoks = jax.vmap(sample_row)(alogits, admit_idx)
+
+        # one combined write plan covering BOTH phases: the decode-
+        # written position of every slot plus the chunk positions of
+        # every compacted row (disjoint physical blocks; idle entries
+        # redirect to scratch block 0)
+        pos_d = jnp.clip(lengths.astype(jnp.int32), 0,
+                         MB * block_size - 1)
+        phys_d = jnp.take_along_axis(
+            tables, (pos_d // block_size)[:, None], axis=1)[:, 0]
+        phys_d = jnp.where(active, phys_d, 0)
+        C = jax.tree_util.tree_leaves(anew.caches)[0].shape[2]
+        phys_a, off_a = _append_write_plan(tables_g, base, chunk_len, C,
+                                           block_size, MB)
+        phys = jnp.concatenate([phys_d, phys_a])
+        off = jnp.concatenate([pos_d % block_size, off_a])
+        dkv, akv = _flatten_kv(dnew.caches), _flatten_kv(anew.caches)
+        kvs = {
+            k: jax.tree_util.tree_map(
+                lambda d, a: jnp.concatenate([d, a], axis=1), dkv[k],
+                akv[k])
+            for k in dkv}
+        new_lengths = (lengths + active.astype(lengths.dtype)).at[
+            psids].add(chunk_len.astype(lengths.dtype))
+        return dtoks, atoks, new_lengths, phys, off, kvs
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Paged scheduler
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _PSlot:
+    rid: int = -1
+    free: bool = True
+    remaining: int = 0
+    eos_id: Optional[int] = None
+    completion: Optional[Completion] = None
+    prompt: Optional[np.ndarray] = None
+    pos: int = 0                  # prompt positions already in the cache
+    n_blocks: int = 0             # allocated table entries
+    prefilling: bool = False
+    reserved: int = 0             # full-window block budget (admission)
+    admit_idx: int = 0            # admission ordinal → first-token key
+    t_admit: float = 0.0          # preemption picks the youngest victim
+    emitted_in_prompt: int = 0    # completion tokens already IN ``prompt``
+                                  # (continuation resume — avoids doubling
+                                  # them on a second preemption)
+
+
+class PagedScheduler(Scheduler):
+    """Continuous batching over the paged block pool.
+
+    Same external contract as :class:`Scheduler` (``submit`` / ``step`` /
+    ``run`` / ``completed`` / ``reset``) — ``run()`` and the finish rule
+    are inherited — but admission maps radix-matched prefix blocks into
+    the slot's table, prefill advances one fixed-width chunk of EVERY
+    prefilling slot per step in one batched dispatch (interleaved with
+    the batched decode step), and memory is accounted in blocks, not
+    slots. Token-identical to :class:`Scheduler`
+    under greedy decode.
+
+    ``num_blocks`` defaults to ``num_slots * ceil(max_len/block_size) + 1``
+    — the slot pool's exact KV footprint plus the scratch block — so
+    slot-vs-paged comparisons are at fixed memory; capacity wins come from
+    raising ``num_slots`` at the same ``num_blocks``.
+
+    ``shardings``: optional caches-shaped dict of ``NamedSharding``s (see
+    ``repro.serve.shard.paged_pool_sharding``) placing the block axis on
+    the data mesh and time-within-block on model.
+    """
+
+    def __init__(self, bundle: ModelBundle, params, *, num_slots: int,
+                 max_len: int, block_size: int = 16,
+                 num_blocks: Optional[int] = None, prefill_chunk: int = 32,
+                 pad_id: int = 0, temperature: float = 0.0, dtype=None,
+                 key=None, shardings=None, use_radix: bool = True,
+                 reserve_decode: bool = True):
+        if not engine.append_ok(bundle):
+            raise ValueError(
+                f"{bundle.cfg.name}: paged serving requires chunk-append "
+                "support (engine.append_ok) — use the slot Scheduler")
+        self.bundle = bundle
+        self.params = params
+        self.num_slots = num_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.MB = -(-max_len // block_size)
+        if num_blocks is None:
+            num_blocks = num_slots * self.MB + 1
+        self.num_blocks = num_blocks
+        self.prefill_chunk = max(int(prefill_chunk), 1)
+        self.reserve_decode = reserve_decode
+        self.pad_id = pad_id
+        self.temperature = temperature
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._key0 = self._key
+        dtype = dtype if dtype is not None else jnp.bfloat16
+
+        abs_state = engine.abstract_decode_state(
+            bundle, num_blocks, block_size, dtype)
+        zeros = lambda s: jnp.zeros(s.shape, s.dtype)
+        self.caches = jax.tree_util.tree_map(zeros, abs_state.caches)
+        if shardings is not None:
+            self.caches = jax.device_put(self.caches, shardings)
+
+        # two-phase step: the compute programs read the pool (gather) and
+        # return fresh K/V + a write plan; pool_write_kv then applies it
+        # as its own donated, pure-write dispatch. Scattering inside the
+        # compute programs would force a full pool copy per step — the
+        # pool is also the gather's input there, so XLA cannot alias.
+        self._append = jax.jit(
+            build_paged_append(bundle, block_size, self.MB,
+                               self.prefill_chunk, temperature))
+        self._step = jax.jit(build_paged_decode_step(
+            bundle, block_size, self.MB, temperature, pad_id))
+        self._fused = jax.jit(build_paged_fused(
+            bundle, block_size, self.MB, self.prefill_chunk, temperature,
+            pad_id))
+        self._write = jax.jit(pool_write_kv, donate_argnums=(0,))
+
+        self.alloc = BlockAllocator(num_blocks)
+        self.radix: Optional[RadixCache] = \
+            RadixCache(block_size) if use_radix else None
+        self.tables = np.zeros((num_slots, self.MB), np.int32)
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self.slots = [_PSlot() for _ in range(num_slots)]
+        self.cur_tokens = np.zeros((num_slots,), np.int32)
+        self.active = np.zeros((num_slots,), bool)
+        self.pending: deque = deque()
+        self._submit_t: Dict[int, float] = {}
+        self.completed: List[Completion] = []
+        self.t = 0
+        # device-resident mirrors of the host control arrays: lengths and
+        # cur_tokens round-trip through the jitted programs' outputs, so
+        # in steady-state decode NOTHING is uploaded per step — host-side
+        # mutations (admission, prompt-finish, block allocs) mark their
+        # array dirty and it re-uploads once. Stale device rows of DEAD
+        # slots are safe by construction: inactive/zero-chunk rows compute
+        # garbage that is masked and their writes redirect to scratch.
+        self._dev: Dict[str, Any] = {}
+        self._dirty = {"tables", "lengths", "cur", "active"}
+        self.stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
+                      "prefill_chunks": 0, "prefill_stalls": 0,
+                      "radix_hit_blocks": 0, "radix_evictions": 0,
+                      "admission_blocked": 0, "preemptions": 0,
+                      "max_concurrent": 0}
+
+    def reset(self) -> None:
+        self._key = self._key0
+        self.caches = jax.tree_util.tree_map(jnp.zeros_like, self.caches)
+        self.alloc.reset()
+        if self.radix is not None:
+            self.radix.reset()
+        self.tables[:] = 0
+        self.lengths[:] = 0
+        self.slots = [_PSlot() for _ in range(self.num_slots)]
+        self.cur_tokens[:] = 0
+        self.active[:] = False
+        self.pending.clear()
+        self._submit_t.clear()
+        self.completed = []
+        self.t = 0
+        self._dev = {}
+        self._dirty = {"tables", "lengths", "cur", "active"}
+        self.stats = {k: 0 for k in self.stats}
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        """Queue a request. Raises ONLY for requests that can NEVER fit —
+        prompt + max_new beyond the per-slot window or beyond the whole
+        usable pool; a momentarily-full pool just queues (admission defers
+        until blocks free up — the queue-then-admit regression test)."""
+        L = len(req.tokens)
+        if L == 0:
+            raise ValueError(
+                f"request {req.rid}: empty prompt — every request needs "
+                ">= 1 token (see engine.check_prompt_lengths)")
+        total = L + req.max_new_tokens
+        if total > self.MB * self.block_size:
+            raise ValueError(
+                f"request {req.rid}: prompt {L} + max_new "
+                f"{req.max_new_tokens} exceeds the per-request window "
+                f"{self.MB * self.block_size} (MB={self.MB} blocks)")
+        need = -(-total // self.block_size)
+        if need > self.alloc.usable_blocks:
+            raise ValueError(
+                f"request {req.rid}: needs {need} blocks but the pool has "
+                f"only {self.alloc.usable_blocks} usable — can never fit")
+        if req.cont is None:
+            self._submit_t[req.rid] = time.monotonic()
+        self.pending.append(req)
+
+    # -- block accounting --------------------------------------------------
+
+    def _alloc_block(self) -> Optional[int]:
+        """Allocate, evicting LRU radix leaves (trie-only blocks) while
+        the free list is dry."""
+        p = self.alloc.alloc()
+        while p is None and self.radix is not None:
+            victim = self.radix.evict(
+                lambda b: int(self.alloc.refcount[b]) == 1)
+            if victim is None:
+                break
+            self.alloc.deref(victim)
+            self.stats["radix_evictions"] += 1
+            p = self.alloc.alloc()
+        return p
+
+    def _can_alloc(self) -> bool:
+        if self.alloc.free_blocks > 0:
+            return True
+        if self.radix is None:
+            return False
+        return any(int(self.alloc.refcount[b]) == 1
+                   for b in self.radix.cached_blocks())
+
+    def _available_blocks(self, exclude=()) -> int:
+        """Free blocks plus radix blocks evictable on demand (held only by
+        the trie), minus any the caller is about to adopt."""
+        n = self.alloc.free_blocks
+        if self.radix is not None:
+            n += sum(1 for b in self.radix.cached_blocks()
+                     if int(self.alloc.refcount[b]) == 1
+                     and b not in exclude)
+        return n
+
+    def _outstanding_reserved(self) -> int:
+        """Blocks promised to live slots but not yet allocated — their
+        remaining prompt + decode growth up to ``max_new`` (only counted
+        under ``reserve_decode`` admission)."""
+        return sum(max(0, s.reserved - s.n_blocks)
+                   for s in self.slots if not s.free)
+
+    # -- device-resident control state ------------------------------------
+
+    def _mark(self, *names: str) -> None:
+        self._dirty.update(names)
+
+    def _device_state(self):
+        """Return (tables, lengths, cur_tokens, active) as device arrays,
+        re-uploading only the ones a host mutation dirtied. The np.array
+        snapshots matter: the host arrays are mutated in place while
+        earlier dispatches may still be in flight, and the CPU backend
+        zero-copy-aliases numpy buffers."""
+        if "tables" in self._dirty:
+            self._dev["tables"] = jnp.asarray(np.array(self.tables))
+        if "lengths" in self._dirty:
+            self._dev["lengths"] = jnp.asarray(np.array(self.lengths))
+        if "cur" in self._dirty:
+            self._dev["cur"] = jnp.asarray(np.array(self.cur_tokens))
+        if "active" in self._dirty:
+            self._dev["active"] = jnp.asarray(np.array(self.active))
+        self._dirty.clear()
+        return (self._dev["tables"], self._dev["lengths"],
+                self._dev["cur"], self._dev["active"])
+
+    def _release_slot(self, sid: int) -> None:
+        """Deref every allocated block and zero the table row."""
+        s = self.slots[sid]
+        for j in range(s.n_blocks):
+            self.alloc.deref(int(self.tables[sid, j]))
+        self.tables[sid, :] = 0
+        s.n_blocks = 0
+        s.reserved = 0
+        s.free, s.rid, s.completion, s.prompt = True, -1, None, None
+        s.prefilling = False
+        self.active[sid] = False
+        self.cur_tokens[sid] = self.pad_id
+        self.lengths[sid] = 0
+        # device rows of a dead slot are stale-but-masked; only `active`
+        # gates emissions and writes, so it alone must resync
+        self._mark("active")
+
+    # -- admission ---------------------------------------------------------
+
+    def _admit(self, sid: int, req: Request) -> bool:
+        """Map radix-matched prefix blocks into the slot's table and start
+        chunked prefill after them. False (leave queued) when the pool
+        cannot cover the request right now — the admission watermark.
+
+        Default (``reserve_decode=True``): admission reserves the FULL
+        window, ``ceil((P + max_new)/block_size)`` blocks minus radix
+        hits, against free + evictable blocks net of every live slot's
+        outstanding reservation. Block granularity plus sharing still
+        admits far more concurrency than the slot pool's flat ``max_len``
+        reserve on mixed-length traffic, but no admitted request can be
+        starved — preemption becomes a backstop, not the steady state.
+        Admitting optimistically (``reserve_decode=False``) thrashes when
+        the offered windows exceed the pool: slots preempt each other
+        mid-decode and burn the savings re-prefilling continuations."""
+        prompt = np.asarray(req.tokens, np.int32)
+        P = len(prompt)
+        s = self.slots[sid]
+        now = time.monotonic()
+
+        matched: List[int] = []
+        if self.radix is not None:
+            # cap one token short of the prompt: at least one suffix token
+            # must run through append to produce the first-token logits
+            cap = ((P - 1) // self.block_size)
+            matched = self.radix.match(prompt)[:cap]
+        reserved = -(-(P + req.max_new_tokens) // self.block_size)
+        if self.reserve_decode:
+            need = reserved - len(matched)
+            avail = self._available_blocks(exclude=set(matched)) \
+                - self._outstanding_reserved()
+        else:
+            need = -(-(P + 1) // self.block_size) - len(matched)
+            avail = self._available_blocks(exclude=set(matched))
+        if need > avail:
+            self.stats["admission_blocked"] += 1
+            return False
+        if matched:
+            for p in matched:
+                self.alloc.ref(int(p))
+            self.stats["radix_hit_blocks"] += len(matched)
+        s.reserved = reserved if self.reserve_decode else 0
+        self.tables[sid, :len(matched)] = matched
+        s.n_blocks = len(matched)
+        s.pos = len(matched) * self.block_size
+        self.lengths[sid] = s.pos
+        self._mark("tables", "lengths")
+
+        s.rid, s.free, s.prefilling = req.rid, False, True
+        s.prompt = prompt
+        s.remaining = req.max_new_tokens
+        s.eos_id = req.eos_id
+        s.t_admit = now
+        s.admit_idx = self.stats["admitted"]
+        if req.cont is not None:
+            s.completion = req.cont       # preempted request resuming
+            s.emitted_in_prompt = len(req.cont.tokens)
+        else:
+            s.emitted_in_prompt = 0
+            s.completion = Completion(
+                rid=req.rid, prompt_len=P, tokens=[],
+                t_submit=self._submit_t.pop(req.rid, now), t_admit=now)
+        self.stats["admitted"] += 1
+        return True
+
+    # -- chunked prefill ---------------------------------------------------
+
+    def _collect_prefill(self):
+        """Gather one fixed-width chunk of work for EVERY prefilling slot
+        (allocating the blocks the chunks land in) for a single batched
+        dispatch. Chunking (rather than one-shot prefill) keeps long
+        prompts from stalling the in-flight decode batch; the batching
+        keeps prefill from serializing across slots. A slot whose chunk
+        cannot get its blocks runs short (as far as its allocated blocks
+        reach) or stalls this step entirely (``chunk_len == 0`` — decode
+        retirements free blocks; preemption only triggers from the decode
+        side, where lack of a block blocks EVERY step)."""
+        C = self.prefill_chunk
+        chunk = np.full((self.num_slots, C), self.pad_id, np.int32)
+        ns = np.zeros((self.num_slots,), np.int32)
+        for sid, s in enumerate(self.slots):
+            if s.free or not s.prefilling:
+                continue
+            n = min(C, len(s.prompt) - s.pos)
+            need = -(-(s.pos + n) // self.block_size)
+            while s.n_blocks < need:
+                p = self._alloc_block()
+                if p is None:
+                    break
+                self.tables[sid, s.n_blocks] = p
+                s.n_blocks += 1
+                self._mark("tables")
+            # pool dry mid-alloc: run as far as allocated blocks reach
+            n = min(n, s.n_blocks * self.block_size - s.pos)
+            if n <= 0:
+                self.stats["prefill_stalls"] += 1
+                continue
+            chunk[sid, :n] = s.prompt[s.pos:s.pos + n]
+            ns[sid] = n
+        return chunk, ns
+
+    def _apply_prefill(self, psids, ns_g, atoks) -> None:
+        """Advance slot cursors past the chunks just processed (``psids``
+        names the compacted dispatch rows); slots whose prompt completed
+        take their in-program-sampled first token (``atoks`` stays on
+        device unless somebody finished)."""
+        toks_host = None
+        for r, sid in enumerate(psids):
+            s = self.slots[sid]
+            if s.free or not s.prefilling:
+                continue        # preempted between collect and apply
+            s.pos += int(ns_g[r])
+            self.lengths[sid] = s.pos
+            self.stats["prefill_chunks"] += 1
+            if s.pos == len(s.prompt):
+                if toks_host is None:
+                    toks_host = np.asarray(atoks)
+                self._finish_prefill(sid, int(toks_host[r]))
+
+    def _finish_prefill(self, sid: int, tok: int) -> None:
+        """Record the first token (sampled inside the append program),
+        publish the prompt's full blocks to the radix cache, and either
+        retire (eos / single-token budget) or activate the slot for
+        batched decode."""
+        s = self.slots[sid]
+        P = len(s.prompt)
+        now = time.monotonic()
+        comp = s.completion
+        if not comp.tokens:
+            comp.t_first = now
+        comp.tokens.append(tok)
+        s.prefilling = False
+        s.remaining -= 1
+
+        if self.radix is not None:
+            nfull = P // self.block_size
+            if nfull:
+                adopted = self.radix.insert(
+                    s.prompt[:nfull * self.block_size],
+                    [int(b) for b in self.tables[sid, :nfull]])
+                for p in adopted:
+                    self.alloc.ref(p)
+
+        if s.remaining <= 0 or (s.eos_id is not None and tok == s.eos_id):
+            comp.t_finish = time.monotonic()
+            self.completed.append(comp)
+            self.stats["retired"] += 1
+            self._release_slot(sid)
+        else:
+            self.cur_tokens[sid] = tok
+            self.active[sid] = True
+            self._mark("cur", "active")
+
+    # -- decode ------------------------------------------------------------
+
+    def _ensure_decode_blocks(self) -> None:
+        """Every active slot needs the block holding position ``lengths``
+        allocated before the step writes there. When the pool is dry even
+        after radix eviction, PREEMPT the youngest other running slot —
+        its blocks free up and its request requeues as a continuation."""
+        for sid in np.nonzero(self.active)[0]:
+            if not self.active[sid]:
+                continue            # preempted by an earlier slot's alloc
+            s = self.slots[sid]
+            bidx = int(self.lengths[sid]) // self.block_size
+            while bidx >= s.n_blocks:
+                p = self._alloc_block()
+                if p is None:
+                    victims = [
+                        i for i, v in enumerate(self.slots)
+                        if not v.free and i != sid]
+                    if not victims:
+                        raise RuntimeError(
+                            "block pool exhausted by a single request — "
+                            "submit() should have rejected it")
+                    self._preempt(max(
+                        victims, key=lambda i: self.slots[i].t_admit))
+                    continue
+                self.tables[sid, s.n_blocks] = p
+                s.n_blocks += 1
+                self._mark("tables")
+
+    def _preempt(self, vid: int) -> None:
+        """Evict a running slot: free its blocks and requeue the request
+        as a continuation (original prompt + emitted tokens). Greedy
+        decode replays the prefix bit-identically, so the resumed stream
+        continues exactly where it stopped."""
+        v = self.slots[vid]
+        comp = v.completion
+        fresh = comp.tokens[v.emitted_in_prompt:]   # not yet in the prompt
+        prompt = np.concatenate([
+            v.prompt, np.asarray(fresh, np.int32)]) if fresh else v.prompt
+        req = Request(rid=v.rid, tokens=prompt,
+                      max_new_tokens=max(v.remaining, 1),
+                      eos_id=v.eos_id, cont=comp)
+        self._release_slot(vid)
+        self.pending.appendleft(req)
+        self.stats["preemptions"] += 1
+
+    # -- the serving loop --------------------------------------------------
+
+    def step(self) -> bool:
+        """Admit while blocks allow, then run ONE dispatch covering this
+        step's decode and/or prefill chunk (the fused program when both
+        phases have work — per-step dispatch overhead dominates
+        small-batch serving). Returns False when idle."""
+        free = [i for i, s in enumerate(self.slots) if s.free]
+        while free and self.pending:
+            if not self._admit(free[0], self.pending[0]):
+                break
+            self.pending.popleft()
+            free.pop(0)
+        self.stats["max_concurrent"] = max(
+            self.stats["max_concurrent"],
+            sum(1 for s in self.slots if not s.free))
+
+        # decode's write blocks first (running slots must never stall),
+        # then prefill chunks take what's left of the pool
+        if self.active.any():
+            self._ensure_decode_blocks()
+        chunk, ns = self._collect_prefill()
+        act = self.active.copy()
+        psids = np.nonzero(ns)[0]
+        any_p, any_d = len(psids) > 0, bool(act.any())
+        if not (any_p or any_d):
+            return bool(self.pending) or \
+                any(not s.free for s in self.slots)
+
+        tables, lengths, cur, act_dev = self._device_state()
+        atoks = dtoks = None
+        if any_p:
+            # compact the prefilling rows, padded to a power-of-two
+            # bucket so jit compiles once per bucket, not per count;
+            # pad rows (slot 0, chunk_len 0) are masked + scratch-bound
+            g = 1 << (len(psids) - 1).bit_length()
+            psids_g = np.zeros((g,), np.int32)
+            psids_g[:len(psids)] = psids
+            chunk_g = np.full((g, chunk.shape[1]), self.pad_id, np.int32)
+            chunk_g[:len(psids)] = chunk[psids]
+            ns_g = np.zeros((g,), np.int32)
+            ns_g[:len(psids)] = ns[psids]
+            admit_g = np.zeros((g,), np.int32)
+            admit_g[:len(psids)] = [self.slots[i].admit_idx
+                                    for i in psids]
+            psids_dev = jnp.asarray(psids_g)
+            chunk_dev, ns_dev = jnp.asarray(chunk_g), jnp.asarray(ns_g)
+            admit_idx = jnp.asarray(admit_g)
+        if any_p and any_d:
+            dkey = jax.random.fold_in(self._key, self.t)
+            dtoks, atoks, new_len, phys, off, kvs = self._fused(
+                self.params, self.caches, tables, lengths, cur, act_dev,
+                psids_dev, chunk_dev, ns_dev, admit_idx, self._key, dkey)
+        elif any_p:
+            atoks, new_len, phys, off, kvs = self._append(
+                self.params, self.caches, tables, lengths,
+                psids_dev, chunk_dev, ns_dev, admit_idx, self._key)
+        else:
+            dkey = jax.random.fold_in(self._key, self.t)
+            dtoks, new_len, phys, off, kvs = self._step(
+                self.params, self.caches, tables, lengths, cur, act_dev,
+                dkey)
+        self.caches = self._write(self.caches, phys, off, kvs)
+        # the programs advance lengths/cur_tokens exactly as the host
+        # bookkeeping below does — keep their outputs as the mirrors
+        self._dev["lengths"] = new_len
+        if dtoks is not None:
+            self._dev["cur"] = dtoks
+
+        if any_p:
+            self._apply_prefill(psids_g[:len(psids)], ns_g, atoks)
+        if any_d:
+            self.t += 1
+            self.stats["decode_steps"] += 1
+            self.lengths[act] += 1
+            toks = np.asarray(dtoks)
+            for sid in np.nonzero(act)[0]:
+                s = self.slots[sid]
+                tok = int(toks[sid])
+                s.completion.tokens.append(tok)
+                s.remaining -= 1
+                if s.remaining <= 0 or \
+                        (s.eos_id is not None and tok == s.eos_id):
+                    s.completion.t_finish = time.monotonic()
+                    self.completed.append(s.completion)
+                    self.stats["retired"] += 1
+                    self._release_slot(sid)
+                else:
+                    self.cur_tokens[sid] = tok
+        return True
+
+    # -- introspection -----------------------------------------------------
+
+    def pool_bytes(self) -> int:
+        """Device bytes held by the block pool (capacity accounting)."""
+        return sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(self.caches))

@@ -52,11 +52,19 @@ from repro.serve.engine import DecodeState
 
 @dataclass
 class Request:
-    """One generation request: ``tokens`` is the unpadded prompt."""
+    """One generation request: ``tokens`` is the unpadded prompt.
+
+    ``cont`` carries the in-progress :class:`Completion` of a PREEMPTED
+    request (paged backend only): the paged scheduler may evict a running
+    sequence when the block pool drains and requeue it as a continuation
+    whose prompt is the original prompt plus everything emitted so far —
+    on re-admission the completion keeps accumulating instead of starting
+    over (greedy decode makes the replayed prefix token-identical)."""
     rid: int
     tokens: Sequence[int]
     max_new_tokens: int
     eos_id: Optional[int] = None
+    cont: Optional["Completion"] = None
 
 
 @dataclass
@@ -66,11 +74,19 @@ class Completion:
     tokens: List[int]                 # generated tokens (eos included)
     t_submit: float = 0.0
     t_admit: float = 0.0
+    t_first: float = 0.0              # first token emitted (TTFT anchor)
     t_finish: float = 0.0
 
     @property
     def latency(self) -> float:
         return self.t_finish - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        """Time-to-first-token: submit → first emitted token. For the slot
+        backend admission and first token coincide; for the paged backend
+        chunked prefill separates them (``t_admit < t_first``)."""
+        return self.t_first - self.t_submit
 
 
 @dataclass
@@ -313,7 +329,7 @@ class Scheduler:
             comp = Completion(rid=req.rid, prompt_len=lens[i],
                               tokens=[tok],
                               t_submit=self._submit_t.pop(req.rid, now),
-                              t_admit=now)
+                              t_admit=now, t_first=now)
             self.stats["admitted"] += 1
             if self._finished(tok, 1, req):
                 # done at the first token: the slot was filled but never
@@ -409,3 +425,30 @@ class Scheduler:
             if not busy and waiting:
                 time.sleep(min(0.001, max(0.0, waiting[0][0] - now)))
         return self.completed
+
+
+def make_scheduler(bundle: ModelBundle, params, *, backend: str = "auto",
+                   num_slots: int, max_len: int, **kw) -> "Scheduler":
+    """Backend selection for the serving runtime.
+
+    ``backend``: ``"slot"`` — the contiguous per-slot pool above (every
+    architecture); ``"paged"`` — the block-pool runtime with radix prefix
+    sharing and chunked prefill (``repro.serve.paged``, requires
+    ``engine.append_ok`` — dense GQA transformer families); ``"auto"`` —
+    paged when the bundle supports it, slot otherwise. Both are
+    token-identical under greedy decode; see ``docs/serving.md`` for when
+    each wins."""
+    if backend == "auto":
+        backend = "paged" if engine.append_ok(bundle) else "slot"
+    if backend == "paged":
+        from repro.serve.paged import PagedScheduler
+        return PagedScheduler(bundle, params, num_slots=num_slots,
+                              max_len=max_len, **kw)
+    if backend == "slot":
+        kw = {k: v for k, v in kw.items()
+              if k not in ("block_size", "num_blocks", "prefill_chunk",
+                           "use_radix")}
+        return Scheduler(bundle, params, num_slots=num_slots,
+                         max_len=max_len, **kw)
+    raise ValueError(f"unknown serving backend {backend!r} "
+                     "(expected 'slot', 'paged', or 'auto')")

@@ -74,3 +74,40 @@ def pool_sharding(bundle, num_slots: int, max_len: int, mesh: Mesh,
     abs_state = engine.abstract_decode_state(bundle, num_slots, max_len,
                                              dtype)
     return decode_state_sharding(abs_state, mesh)
+
+
+def paged_pool_sharding(bundle, num_blocks: int, block_size: int,
+                        mesh: Mesh, dtype=None):
+    """Shardings for the PAGED block pool (``repro.serve.paged``): cache
+    leaves are ``(L, num_blocks, block_size, …)`` — the BLOCK axis sits
+    where the batch axis normally does (dim 1, the batch-major
+    ``cache_spec`` contract), so it shards over the data mesh axes
+    (``num_blocks`` must divide; the ``num_slots·MB + 1`` default does
+    not — pick a divisible count for sharded pools), and KV time WITHIN a
+    block (dim 2) goes on model when divisible — the context-parallel
+    rule applied per block. Returns a caches-shaped dict for
+    ``PagedScheduler(..., shardings=...)``; the jitted gather/append/
+    scatter programs then keep every pool buffer distributed (GSPMD turns
+    traced-index block gathers into collective gathers)."""
+    import jax.numpy as jnp
+
+    from repro.serve import engine
+    dtype = dtype if dtype is not None else jnp.bfloat16
+    abs_state = engine.abstract_decode_state(bundle, num_blocks, block_size,
+                                             dtype)
+    dp = batch_axes(mesh)
+    dp_total = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+    def one(leaf):
+        shape = tuple(leaf.shape)
+        parts: list = [None] * len(shape)
+        if len(shape) > 1 and dp and shape[1] % dp_total == 0 \
+                and shape[1] > 1:
+            parts[1] = dp
+        if "model" in mesh.axis_names and len(shape) > 2:
+            msize = mesh.shape["model"]
+            if shape[2] % msize == 0 and shape[2] >= msize:
+                parts[2] = "model"
+        return NamedSharding(mesh, P(*parts))
+
+    return jax.tree_util.tree_map(one, abs_state.caches)

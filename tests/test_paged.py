@@ -1,0 +1,366 @@
+"""Paged serving runtime (serve/paged.py + serve/radix.py): allocator
+property tests, chunked-prefill bit-identity, radix prefix-cache hit
+exactness, slot-vs-paged token parity (incl. under eviction, preemption,
+and queueing backpressure), and the fixed-memory capacity win."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import model_zoo
+from repro.serve import engine
+from repro.serve.paged import BlockAllocator, PagedScheduler
+from repro.serve.radix import RadixCache
+from repro.serve.scheduler import Request, Scheduler, make_scheduler
+
+PAD = 0
+
+
+@pytest.fixture(scope="module")
+def bundle60():
+    return model_zoo.build_arch("llama-60m", smoke=True, dtype=jnp.float32)
+
+
+@pytest.fixture(scope="module")
+def params60(bundle60):
+    return bundle60.init_params(jax.random.PRNGKey(0))
+
+
+def _reqs(rng, V, n, *, lo=3, hi=20, new_lo=2, new_hi=8, shared=None,
+          share_every=2):
+    out = []
+    for i in range(n):
+        p = rng.integers(1, V, size=int(rng.integers(lo, hi))) \
+            .astype(np.int32)
+        if shared is not None and i % share_every == 0:
+            p = np.concatenate([np.asarray(shared, np.int32), p])
+        out.append(Request(rid=i, tokens=p.tolist(),
+                           max_new_tokens=int(rng.integers(new_lo, new_hi))))
+    return out
+
+
+def _clone(reqs):
+    return [Request(r.rid, list(r.tokens), r.max_new_tokens, r.eos_id)
+            for r in reqs]
+
+
+# ---------------------------------------------------------------------------
+# Block allocator: property tests
+# ---------------------------------------------------------------------------
+
+def test_allocator_random_ops_never_leak_or_double_free():
+    """Fuzz alloc/ref/deref against a reference model: after any legal
+    sequence, refcounts and the free list partition the pool exactly
+    (no leaks, no duplicates), and illegal ops raise."""
+    rng = np.random.default_rng(0)
+    for trial in range(20):
+        a = BlockAllocator(int(rng.integers(2, 40)))
+        live = {}                       # phys -> model refcount
+        for _ in range(300):
+            op = rng.integers(0, 3)
+            if op == 0:
+                p = a.alloc()
+                if p is None:
+                    assert not a.free_blocks
+                else:
+                    assert p not in live and p != 0
+                    live[p] = 1
+            elif op == 1 and live:
+                p = int(rng.choice(list(live)))
+                a.ref(p)
+                live[p] += 1
+            elif op == 2 and live:
+                p = int(rng.choice(list(live)))
+                a.deref(p)
+                live[p] -= 1
+                if live[p] == 0:
+                    del live[p]
+            a.check()
+            assert {p: int(a.refcount[p]) for p in live} == live
+            assert a.free_blocks == a.usable_blocks - len(live)
+        # illegal ops are loud
+        with pytest.raises(ValueError):
+            a.deref(0)
+        p = a.alloc()
+        if p is not None:
+            a.deref(p)
+            with pytest.raises(ValueError):
+                a.deref(p)
+
+
+def test_allocator_accounts_after_random_admit_retire(bundle60, params60):
+    """Scheduler-level property: after ANY random admit/retire traffic the
+    allocator invariant holds and every non-radix block is back on the
+    free list."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(1)
+    shared = rng.integers(1, V, size=16)
+    sched = PagedScheduler(bundle60, params60, num_slots=4, max_len=48,
+                           block_size=8, num_blocks=18, prefill_chunk=8,
+                           dtype=jnp.float32)
+    for round_ in range(3):
+        sched.run(_reqs(rng, V, 7, shared=shared))
+        sched.alloc.check()
+        held = sum(1 for b in sched.radix.cached_blocks())
+        assert sched.alloc.free_blocks == sched.alloc.usable_blocks - held
+    # radix blocks are exactly the ones still referenced
+    for b in sched.radix.cached_blocks():
+        assert int(sched.alloc.refcount[b]) == 1
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: bit-identity
+# ---------------------------------------------------------------------------
+
+def test_chunked_append_bit_identical_every_chunk_size(bundle60, params60):
+    """Appending a length-L prompt in chunks of c must reproduce one-shot
+    prefill BIT-identically (logits and cache) for every c — the
+    correctness substrate of paged serving."""
+    V = bundle60.cfg.vocab_size
+    MAX_LEN = 32
+    rng = np.random.default_rng(2)
+    P = 13
+    prompt = rng.integers(1, V, size=P).astype(np.int32)
+
+    prefill = jax.jit(engine.build_prefill(bundle60, MAX_LEN))
+    logits_ref, state_ref = prefill(
+        params60, {"tokens": jnp.asarray(prompt)[None]})
+    append = jax.jit(engine.build_append(bundle60, MAX_LEN))
+
+    def empty():
+        ds = engine.abstract_decode_state(bundle60, 1, MAX_LEN, jnp.float32)
+        caches = jax.tree_util.tree_map(
+            lambda s: jnp.zeros(s.shape, s.dtype), ds.caches)
+        return engine.DecodeState(caches, jnp.zeros((1,), jnp.int32), {})
+
+    for c in range(1, P + 2):
+        st = empty()
+        pos = 0
+        while pos < P:
+            n = min(c, P - pos)
+            chunk = np.full((1, c), PAD, np.int32)
+            chunk[0, :n] = prompt[pos:pos + n]
+            logits, st = append(params60, st, jnp.asarray(chunk),
+                                jnp.asarray(n, jnp.int32)[None])
+            pos += n
+        assert float(jnp.abs(logits - logits_ref).max()) == 0.0, c
+        for a, b in zip(jax.tree_util.tree_leaves(st.caches),
+                        jax.tree_util.tree_leaves(state_ref.caches)):
+            # one-shot prefill only wrote the first P positions; append
+            # also only wrote those (masked scatter) — full-leaf compare
+            assert float(jnp.abs(a[:, :, :P] - b[:, :, :P]).max()) == 0.0, c
+        assert int(st.lengths[0]) == P
+
+
+def test_append_rejected_for_non_append_bundles():
+    """Families that cannot promise chunked==one-shot (recurrent state)
+    must refuse build_append loudly, and the paged scheduler must refuse
+    them too."""
+    bundle = model_zoo.build_arch("xlstm-125m", smoke=True,
+                                  dtype=jnp.float32)
+    assert not engine.append_ok(bundle)
+    with pytest.raises(ValueError, match="chunk-append"):
+        engine.build_append(bundle, 32)
+    with pytest.raises(ValueError, match="paged serving"):
+        PagedScheduler(bundle, None, num_slots=2, max_len=32)
+    # make_scheduler auto-falls back to the slot backend
+    params = bundle.init_params(jax.random.PRNGKey(0))
+    sched = make_scheduler(bundle, params, backend="auto", num_slots=2,
+                           max_len=32, dtype=jnp.float32)
+    assert type(sched) is Scheduler
+
+
+# ---------------------------------------------------------------------------
+# Token parity: paged vs slot under greedy decode
+# ---------------------------------------------------------------------------
+
+def test_paged_token_identical_to_slot(bundle60, params60):
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(3)
+    shared = rng.integers(1, V, size=24)
+    reqs = _reqs(rng, V, 12, shared=shared)
+
+    slot = Scheduler(bundle60, params60, num_slots=4, max_len=64,
+                     dtype=jnp.float32)
+    ref = {c.rid: c.tokens for c in slot.run(_clone(reqs))}
+
+    paged = PagedScheduler(bundle60, params60, num_slots=4, max_len=64,
+                           block_size=8, prefill_chunk=8,
+                           dtype=jnp.float32)
+    out = {c.rid: c.tokens for c in paged.run(_clone(reqs))}
+    assert out == ref
+    assert paged.stats["radix_hit_blocks"] > 0    # sharing actually hit
+    assert all(c.t_first >= c.t_admit > 0 for c in paged.completed)
+
+
+def test_paged_parity_under_eviction_and_preemption(bundle60, params60):
+    """A pool too small for the offered concurrency must still produce
+    slot-identical tokens — radix eviction and youngest-victim preemption
+    only move WHERE blocks live, never what they contain."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(4)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(1, V, size=8).astype(np.int32)
+                    .tolist(),
+                    max_new_tokens=12) for i in range(4)]
+
+    slot = Scheduler(bundle60, params60, num_slots=4, max_len=20,
+                     dtype=jnp.float32)
+    ref = {c.rid: c.tokens for c in slot.run(_clone(reqs))}
+
+    # 3 concurrent want 15 blocks; pool has 11 usable → preemption
+    # (optimistic admission — the default full-window reservation would
+    # queue the third request instead of ever preempting)
+    paged = PagedScheduler(bundle60, params60, num_slots=3, max_len=20,
+                           block_size=4, num_blocks=12, prefill_chunk=4,
+                           dtype=jnp.float32, reserve_decode=False)
+    out = {c.rid: c.tokens for c in paged.run(_clone(reqs))}
+    assert out == ref
+    assert paged.stats["preemptions"] > 0
+    paged.alloc.check()
+    assert paged.alloc.free_blocks == paged.alloc.usable_blocks - \
+        len(paged.radix.cached_blocks())
+
+
+# ---------------------------------------------------------------------------
+# Radix prefix cache
+# ---------------------------------------------------------------------------
+
+def test_prefix_cache_hit_blocks_bit_identical_to_cold_prefill(
+        bundle60, params60):
+    """A radix-hit request must read KV blocks BIT-identical to what a
+    cold prefill of its full prompt would produce — shared blocks are
+    never mutated (the share-only degenerate of copy-on-write)."""
+    V = bundle60.cfg.vocab_size
+    blk = 8
+    rng = np.random.default_rng(5)
+    shared = rng.integers(1, V, size=2 * blk).astype(np.int32)
+    suffix = rng.integers(1, V, size=5).astype(np.int32)
+    prompt_b = np.concatenate([shared, suffix])
+
+    paged = PagedScheduler(bundle60, params60, num_slots=2, max_len=48,
+                           block_size=blk, prefill_chunk=8,
+                           dtype=jnp.float32)
+    # request A seeds the radix cache with the shared blocks
+    paged.run([Request(rid=0, tokens=shared.tolist(), max_new_tokens=2)])
+    hits0 = paged.stats["radix_hit_blocks"]
+    # request B shares the prefix — admission must map A's blocks
+    paged.run([Request(rid=1, tokens=prompt_b.tolist(), max_new_tokens=2)])
+    assert paged.stats["radix_hit_blocks"] - hits0 == 2
+
+    # the cached blocks must hold KV BIT-identical to a cold one-shot
+    # prefill of the cached prefix itself. (A longer prompt's prefill of
+    # the same positions can differ by ~1 ulp — XLA tiles matmuls
+    # shape-dependently, the same reason width-1 append chunks are padded
+    # in engine.build_append — which greedy token parity absorbs; see
+    # test_paged_token_identical_to_slot, where radix hits are live.)
+    matched = paged.radix.match(prompt_b)
+    table = np.zeros((paged.MB,), np.int32)
+    table[:len(matched)] = matched
+    prefill = jax.jit(engine.build_prefill(bundle60, paged.MB * blk))
+    _, cold = prefill(params60, {"tokens": jnp.asarray(shared)[None]})
+    for key in cold.caches:
+        for shared_leaf, cold_leaf in zip(
+                jax.tree_util.tree_leaves(paged.caches[key]),
+                jax.tree_util.tree_leaves(cold.caches[key])):
+            got = jnp.take(shared_leaf, jnp.asarray(table), axis=1) \
+                .reshape(shared_leaf.shape[0], 1, paged.MB * blk,
+                         *shared_leaf.shape[3:])
+            n = len(matched) * blk      # the shared (cached) positions
+            err = jnp.abs(got[:, :, :n] - cold_leaf[:, :, :n]).max()
+            assert float(err) == 0.0
+
+
+def test_radix_lru_evicts_leaves_first():
+    r = RadixCache(block_size=2)
+    adopted = r.insert([1, 2, 3, 4], [10, 11])    # chain 10 -> 11
+    assert adopted == [10, 11]
+    r.insert([1, 2, 9, 9], [10, 12])              # branch at depth 1
+    assert len(r) == 3
+    # internal node 10 is pinned while children live
+    assert r.evict(lambda p: p == 10) is None
+    # LRU leaf goes first (11 older than 12)
+    assert r.evict(lambda p: True) == 11
+    assert r.evict(lambda p: True) == 12
+    assert r.evict(lambda p: True) == 10          # now a leaf
+    assert r.evict(lambda p: True) is None
+    assert len(r) == 0
+
+
+# ---------------------------------------------------------------------------
+# Admission backpressure (the submit bugfix)
+# ---------------------------------------------------------------------------
+
+def test_submit_queues_when_pool_momentarily_full(bundle60, params60):
+    """A request that fits the pool but not RIGHT NOW must queue and
+    complete once blocks free up — only can-never-fit requests raise."""
+    V = bundle60.cfg.vocab_size
+    rng = np.random.default_rng(6)
+    paged = PagedScheduler(bundle60, params60, num_slots=3, max_len=32,
+                           block_size=8, num_blocks=9, prefill_chunk=8,
+                           dtype=jnp.float32, use_radix=False)
+    # two requests that together hold the whole 8-block pool for a while
+    # (4 blocks each once decode crosses position 24) — a slot stays free
+    # but no block does, so the latecomer must defer on BLOCKS
+    big = [Request(rid=i,
+                   tokens=rng.integers(1, V, size=20).astype(np.int32)
+                   .tolist(),
+                   max_new_tokens=10) for i in range(2)]
+    late = Request(rid=9, tokens=rng.integers(1, V, size=10)
+                   .astype(np.int32).tolist(), max_new_tokens=4)
+    for r in big:
+        paged.submit(r)
+    # drive until both hold their 4th block (pool saturated), then submit
+    for _ in range(40):
+        paged.step()
+        if paged.alloc.free_blocks == 0:
+            break
+    assert paged.alloc.free_blocks == 0
+    paged.submit(late)          # must NOT raise
+    while paged.step():
+        pass
+    done = {c.rid for c in paged.completed}
+    assert done == {0, 1, 9}
+    assert paged.stats["admission_blocked"] > 0
+
+    # can never fit: per-request window
+    with pytest.raises(ValueError, match="window"):
+        paged.submit(Request(rid=10, tokens=[1] * 30, max_new_tokens=10))
+    # can never fit: whole pool
+    small = PagedScheduler(bundle60, params60, num_slots=1, max_len=32,
+                           block_size=8, num_blocks=3, prefill_chunk=8,
+                           dtype=jnp.float32)
+    with pytest.raises(ValueError, match="never fit"):
+        small.submit(Request(rid=11, tokens=[1] * 20, max_new_tokens=10))
+
+
+# ---------------------------------------------------------------------------
+# Capacity at fixed memory
+# ---------------------------------------------------------------------------
+
+def test_paged_admits_2x_concurrency_at_fixed_memory(bundle60, params60):
+    """Mixed-length traffic: the slot pool burns max_len KV per request;
+    the paged pool spends blocks on ACTUAL lengths, so at the same pool
+    bytes it runs >= 2x the concurrent requests."""
+    V = bundle60.cfg.vocab_size
+    MAX_LEN, BLK = 64, 8
+    rng = np.random.default_rng(7)
+    # short requests: ~2 blocks each vs the slot pool's 8-block reserve
+    reqs = _reqs(rng, V, 8, lo=4, hi=10, new_lo=4, new_hi=7)
+
+    slot = Scheduler(bundle60, params60, num_slots=4, max_len=MAX_LEN,
+                     dtype=jnp.float32)
+    ref = {c.rid: c.tokens for c in slot.run(_clone(reqs))}
+
+    # same block memory as the 4-slot pool (+1 scratch), 8 slots
+    paged = PagedScheduler(bundle60, params60, num_slots=8, max_len=MAX_LEN,
+                           block_size=BLK,
+                           num_blocks=4 * (MAX_LEN // BLK) + 1,
+                           prefill_chunk=16, dtype=jnp.float32)
+    slot_bytes = sum(
+        leaf.size * leaf.dtype.itemsize
+        for leaf in jax.tree_util.tree_leaves(slot.pool.caches))
+    assert paged.pool_bytes() <= slot_bytes * (1 + 1 / (4 * MAX_LEN // BLK))
+    out = {c.rid: c.tokens for c in paged.run(_clone(reqs))}
+    assert out == ref
+    assert paged.stats["max_concurrent"] >= 2 * slot.num_slots
